@@ -1,0 +1,60 @@
+"""Paper Fig. 16: end-to-end ResNet-18 inference, CPU-only vs CPU+VTA.
+
+Conv layers C2..C12 are offloaded to VTA (timed by the cycle-level
+simulator over the real JIT'd instruction streams); C1 and the non-conv
+residue (pooling, FC, residual adds) run on the modeled ARM Cortex-A9.
+The paper reports: >3 s CPU-only -> <0.5 s offloaded, ~40x speedup on
+offloaded conv layers.
+"""
+from __future__ import annotations
+
+from repro.core import hwspec
+from repro.core.pipeline_model import conv_roofline_point
+from repro.core.workloads import (CPU_EFFECTIVE_GOPS, CPU_RESIDUE_SECONDS,
+                                  resnet18_table1)
+
+
+def run(quiet: bool = False):
+    spec = hwspec.pynq()
+    rows = []
+    cpu_total = CPU_RESIDUE_SECONDS
+    off_total = CPU_RESIDUE_SECONDS
+    conv_cpu = conv_vta = 0.0
+    for layer in resnet18_table1():
+        gop = layer.shape.gops * layer.repeat
+        t_cpu = gop / CPU_EFFECTIVE_GOPS
+        if layer.cpu_only:
+            t_vta = t_cpu
+            util = 0.0
+        else:
+            p = conv_roofline_point(spec, layer.shape, layer.name,
+                                    virtual_threads=2)
+            t_vta = layer.repeat * p.total_cycles / (spec.freq_mhz * 1e6)
+            util = p.utilization
+            conv_cpu += t_cpu
+            conv_vta += t_vta
+        cpu_total += t_cpu
+        off_total += t_vta
+        rows.append({"layer": layer.name, "repeat": layer.repeat,
+                     "gop": round(gop, 3),
+                     "cpu_seconds": round(t_cpu, 4),
+                     "vta_seconds": round(t_vta, 4),
+                     "speedup": round(t_cpu / t_vta, 1),
+                     "vta_utilization": round(util, 3)})
+    if not quiet:
+        print(",".join(rows[0].keys()))
+        for r in rows:
+            print(",".join(str(v) for v in r.values()))
+        print(f"\ncpu_only_total_s,{cpu_total:.3f}")
+        print(f"cpu_plus_vta_total_s,{off_total:.3f}")
+        print(f"offloaded_conv_speedup,{conv_cpu / max(conv_vta, 1e-9):.1f}x")
+        print("paper_claim,>3s -> <0.5s; ~40x conv speedup")
+    return rows, cpu_total, off_total, conv_cpu / max(conv_vta, 1e-9)
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

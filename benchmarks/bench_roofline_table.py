@@ -1,0 +1,55 @@
+"""§Roofline table: aggregate experiments/dryrun/*.json into the
+EXPERIMENTS.md table (one row per compiled cell)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "mesh", "quantized", "compute_ms", "memory_ms",
+        "collective_ms", "dominant", "useful_ratio", "gib_per_dev",
+        "roofline_fraction")
+
+
+def rows(dirname: str = "experiments/dryrun", tagged: bool = False):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        base = os.path.basename(f)
+        if not tagged and base.count("__") > 2:
+            pass  # tagged variants included too; caller filters
+        d = json.load(open(f))
+        r = d["roofline"]
+        out.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "mesh": "multi" if "multi" in d["mesh"] else "single",
+            "quantized": d.get("quantized", False),
+            "tag": base,
+            "compute_ms": r["compute_term_s"] * 1e3,
+            "memory_ms": r["memory_term_s"] * 1e3,
+            "collective_ms": r["collective_term_s"] * 1e3,
+            "dominant": r["dominant"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "gib_per_dev": d["memory"].get("total_bytes_per_device", 0) / 2**30,
+            "roofline_fraction": r.get("roofline_fraction", 0.0),
+        })
+    return out
+
+
+def run(quiet: bool = False):
+    rs = rows()
+    if not quiet:
+        print(",".join(COLS))
+        for r in rs:
+            print(",".join(
+                f"{r[c]:.2f}" if isinstance(r[c], float) else str(r[c])
+                for c in COLS))
+        print(f"\ntotal_cells,{len(rs)}")
+    return rs
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

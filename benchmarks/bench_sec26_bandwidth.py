@@ -1,0 +1,39 @@
+"""Paper §2.6: SRAM bandwidth needed to keep the GEMM core busy.
+
+The paper derives, for BATCH=2, BLOCK_IN=BLOCK_OUT=16 at 200 MHz:
+51.2 Gb/s (input buffer), 409.6 Gb/s (weight buffer), 204.8 Gb/s
+(register file read; x2 with write-back).  The numbers fall out of the
+HardwareSpec identities — this benchmark checks them and prints the same
+derivation for the paper's evaluation build and the TPU-flavoured
+template instance.
+"""
+from __future__ import annotations
+
+from repro.core import hwspec
+
+
+def run(quiet: bool = False):
+    rows = []
+    for name, spec in (("pynq_batch2_200MHz", hwspec.pynq_batch2()),
+                       ("pynq_eval_100MHz", hwspec.pynq()),
+                       ("tpu_like", hwspec.tpu_like())):
+        bw = spec.gemm_sram_bandwidth_gbps
+        rows.append({"config": name,
+                     "inp_gbps": round(bw["inp"], 1),
+                     "wgt_gbps": round(bw["wgt"], 1),
+                     "acc_rw_gbps": round(bw["acc"], 1),
+                     "peak_gops": round(spec.peak_gops, 1)})
+    if not quiet:
+        print(",".join(rows[0].keys()))
+        for r in rows:
+            print(",".join(str(v) for v in r.values()))
+        print("paper_claim,51.2/409.6/204.8 Gb/s at BATCH=2 16x16 200MHz")
+    return rows
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

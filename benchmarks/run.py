@@ -1,0 +1,64 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines plus each
+benchmark's own table.  The dry-run roofline table is included when
+experiments/dryrun JSONs exist (produced by `python -m
+repro.launch.dryrun --all`).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _section(title):
+    print(f"\n==== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main() -> None:
+    from benchmarks import (bench_fig15_roofline, bench_fig16_e2e,
+                            bench_kernels, bench_roofline_table,
+                            bench_sec26_bandwidth)
+
+    summary = []
+
+    _section("Paper Fig. 15: ResNet-18 roofline + latency hiding")
+    t0 = time.perf_counter()
+    rows, u1, u2 = bench_fig15_roofline.run()
+    summary.append(("fig15_latency_hiding",
+                    (time.perf_counter() - t0) * 1e6,
+                    f"util {u1:.2f}->{u2:.2f} (paper 0.70->0.88)"))
+
+    _section("Paper Fig. 16: end-to-end ResNet-18 offload")
+    t0 = time.perf_counter()
+    _, cpu_s, off_s, speedup = bench_fig16_e2e.run()
+    summary.append(("fig16_e2e_offload", (time.perf_counter() - t0) * 1e6,
+                    f"{cpu_s:.2f}s->{off_s:.2f}s conv x{speedup:.0f}"))
+
+    _section("Paper Sec 2.6: GEMM-core SRAM bandwidth")
+    t0 = time.perf_counter()
+    bench_sec26_bandwidth.run()
+    summary.append(("sec26_bandwidth", (time.perf_counter() - t0) * 1e6,
+                    "derivation check"))
+
+    _section("Kernel microbench (interpret mode + oracle check)")
+    t0 = time.perf_counter()
+    bench_kernels.run()
+    summary.append(("kernels", (time.perf_counter() - t0) * 1e6, "oracle ok"))
+
+    _section("Dry-run roofline table (from experiments/dryrun)")
+    t0 = time.perf_counter()
+    try:
+        rs = bench_roofline_table.run()
+        summary.append(("roofline_table", (time.perf_counter() - t0) * 1e6,
+                        f"{len(rs)} cells"))
+    except Exception as e:
+        print(f"(no dry-run results yet: {e})")
+
+    _section("summary CSV")
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: VTA (Versatile Tensor Accelerator) hardware-software stack in JAX.
+
+Layers: core (VTA template/ISA/runtime/simulator/compiler), kernels
+(Pallas TPU realizations), models (assigned LM architectures), distributed
+substrate (mesh/sharding/checkpoint/fault-tolerance), launch (dry-run,
+train, serve).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .checkpointer import (AsyncCheckpointer, latest_step, restore_checkpoint,
+                           save_checkpoint)

@@ -1,0 +1,6 @@
+"""VTA core: the paper's contribution (template, ISA, runtime, simulator,
+scheduler) as a composable package."""
+from . import conv, driver, hwspec, isa, layout, microop, pipeline_model  # noqa: F401
+from . import quantize, runtime, scheduler, simulator, workloads  # noqa: F401
+from .hwspec import HardwareSpec, pynq, pynq_batch2, tpu_like  # noqa: F401
+from .runtime import Runtime  # noqa: F401

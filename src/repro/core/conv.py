@@ -1,0 +1,327 @@
+"""Direct 2D convolution lowered onto VTA (§2.6, Fig. 9, §4.2).
+
+Tensorizes NCHW conv2d onto the GEMM intrinsic *without* host-side im2col:
+the load module's 2D strided DMA inserts spatial zero-padding on the fly,
+and the micro-op kernel's 2-level affine loop walks (kh, kw, icb) — the
+access-pattern compression the paper describes in §2.5.
+
+SRAM layouts per virtual-thread context:
+  inp  tile: (cbt, iht, IWp)    idx = (cb*iht + ih)*IWp + iw
+  wgt  tile: (ocbt, cbt*KH*KW)  idx = ocb*cbt*KH*KW + (cb*KH+kh)*KW + kw
+  acc  tile: (ocbt, oht, OW)    idx = (ocb*oht + oh)*OW + ow     (+ bias slot)
+
+One GEMM instruction per output row `oh_l`:
+  i0 = ow   (extent OW,   dst*1,        src*S,  wgt*0)
+  i1 = ocb  (extent ocbt, dst*oht*OW,   src*0,  wgt*cbt*KH*KW)
+  uops enumerate (cb, kh, kw).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import layout
+from .hwspec import HardwareSpec
+from .isa import AluOp, MemId
+from .runtime import Runtime, UopBuilder, UopKernel
+from .scheduler import (Epilogue, _ceil_div, _ThreadDeps,
+                        interleave_virtual_threads)
+
+
+@dataclass(frozen=True)
+class ConvShape:
+    """One conv2d workload (Table 1 row)."""
+    n: int
+    h: int
+    w: int
+    ic: int
+    oc: int
+    kh: int
+    kw: int
+    stride: int
+    pad: int
+
+    @property
+    def oh(self) -> int:
+        return (self.h + 2 * self.pad - self.kh) // self.stride + 1
+
+    @property
+    def ow(self) -> int:
+        return (self.w + 2 * self.pad - self.kw) // self.stride + 1
+
+    @property
+    def macs(self) -> int:
+        return self.n * self.oc * self.oh * self.ow * self.ic * self.kh * self.kw
+
+    @property
+    def gops(self) -> float:
+        return 2.0 * self.macs / 1e9
+
+    def dram_bytes(self, spec: HardwareSpec) -> int:
+        """Minimum DRAM traffic (one pass over each tensor, int8/int32)."""
+        inp = self.n * self.ic * self.h * self.w
+        wgt = self.oc * self.ic * self.kh * self.kw
+        out = self.n * self.oc * self.oh * self.ow
+        return inp + wgt + out
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return 2.0 * self.macs / self.dram_bytes(HardwareSpec())
+
+
+@dataclass
+class ConvPlan:
+    shape: ConvShape
+    tiles: Tuple[int, int, int]      # (oht, ocbt, cbt)
+    x_addr: int
+    w_addr: int
+    y_addr: int
+    Nb: int
+    Cb: int
+    OCb: int
+
+
+def choose_conv_tiles(shape: ConvShape, spec: HardwareSpec,
+                      virtual_threads: int, bias: bool) -> Tuple[int, int, int]:
+    Cb = _ceil_div(shape.ic, spec.block_in)
+    OCb = _ceil_div(shape.oc, spec.block_out)
+    IWp = shape.w + 2 * shape.pad
+    inp_cap = spec.inp_depth // virtual_threads
+    wgt_cap = spec.wgt_depth // virtual_threads
+    acc_cap = spec.acc_depth // virtual_threads
+
+    def fits(oht, ocbt, cbt):
+        iht = (oht - 1) * shape.stride + shape.kh
+        a = oht * shape.ow * ocbt + (ocbt if bias else 0)
+        return (cbt * iht * IWp <= inp_cap
+                and ocbt * cbt * shape.kh * shape.kw <= wgt_cap
+                and a <= acc_cap)
+
+    oht, ocbt, cbt = 1, 1, 1
+    if not fits(1, 1, 1):
+        raise ValueError(
+            f"conv tile (1,1,1) does not fit SRAM for {shape} "
+            f"(inp needs {shape.kh * IWp} of {inp_cap}) — offload to CPU")
+    changed = True
+    while changed:
+        changed = False
+        for grow in ("cbt", "ocbt", "oht"):
+            o2, c2, b2 = oht, ocbt, cbt
+            if grow == "cbt" and cbt < Cb:
+                b2 = min(Cb, cbt * 2)
+            elif grow == "ocbt" and ocbt < OCb:
+                c2 = min(OCb, ocbt * 2)
+            elif grow == "oht" and oht < shape.oh:
+                o2 = min(shape.oh, oht * 2)
+            if (o2, c2, b2) != (oht, ocbt, cbt) and fits(o2, c2, b2):
+                oht, ocbt, cbt = o2, c2, b2
+                changed = True
+    return oht, ocbt, cbt
+
+
+def schedule_conv2d(rt: Runtime, x: np.ndarray, w: np.ndarray,
+                    shape: ConvShape, epilogue: Optional[Epilogue] = None,
+                    virtual_threads: int = 2) -> ConvPlan:
+    """Lower y = conv2d(x, w) (+epilogue) onto VTA."""
+    spec = rt.spec
+    ep = epilogue or Epilogue()
+    assert x.shape == (shape.n, shape.ic, shape.h, shape.w)
+    assert w.shape == (shape.oc, shape.ic, shape.kh, shape.kw)
+    S, KH, KW, pad = shape.stride, shape.kh, shape.kw, shape.pad
+    OH, OW = shape.oh, shape.ow
+    IWp = shape.w + 2 * pad
+
+    xb = layout.pack_conv_inp(x, spec)
+    wb = layout.pack_conv_wgt(w, spec)
+    Nb, Cb, H, W = xb.shape[0], xb.shape[1], xb.shape[2], xb.shape[3]
+    OCb = wb.shape[0]
+    x_addr = rt.copy_to_device(xb, align=spec.inp_elem_bytes)
+    w_addr = rt.copy_to_device(wb, align=spec.wgt_elem_bytes)
+    y_addr = rt.buffer_alloc(Nb * OCb * OH * OW * spec.out_elem_bytes,
+                             align=spec.out_elem_bytes)
+    b_base = -1
+    if ep.bias_blocked is not None:
+        b_addr = rt.copy_to_device(
+            np.ascontiguousarray(ep.bias_blocked, np.int32),
+            align=spec.acc_elem_bytes)
+        b_base = rt.to_elem_addr(b_addr, MemId.ACC)
+
+    vt = virtual_threads
+    oht, ocbt, cbt = choose_conv_tiles(shape, spec, vt, ep.bias_blocked is not None)
+    iht = (oht - 1) * S + KH
+    inp_ctx = spec.inp_depth // vt
+    wgt_ctx = spec.wgt_depth // vt
+    acc_ctx = spec.acc_depth // vt
+    deps = [_ThreadDeps() for _ in range(vt)]
+
+    x_base = rt.to_elem_addr(x_addr, MemId.INP)
+    w_base = rt.to_elem_addr(w_addr, MemId.WGT)
+    y_base = rt.to_elem_addr(y_addr, MemId.OUT)
+
+    def gemm_kernel(oh_l, cbt_c, ocbt_c, acc_base, inp_base, wgt_base) -> UopKernel:
+        def build(b: UopBuilder):
+            b.loop_begin(OW, dst_factor=1, src_factor=S, wgt_factor=0)
+            b.loop_begin(ocbt_c, dst_factor=oht * OW, src_factor=0,
+                         wgt_factor=cbt_c * KH * KW)
+            for cb in range(cbt_c):
+                for kh in range(KH):
+                    for kw in range(KW):
+                        b.push(dst=acc_base + oh_l * OW,
+                               src=inp_base + (cb * iht + oh_l * S + kh) * IWp + kw,
+                               wgt=wgt_base + (cb * KH + kh) * KW + kw)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(
+            build, key=f"cv.{shape}.{oh_l}.{cbt_c}.{ocbt_c}.{acc_base}.{inp_base}.{wgt_base}")
+
+    def reset_kernel(ocbt_c, oht_c, acc_base) -> UopKernel:
+        # note: the ocb stride in the acc tile is the *full* oht (layout),
+        # even when an edge tile only computes oht_c < oht rows.
+        def build(b: UopBuilder):
+            b.loop_begin(ocbt_c, dst_factor=oht * OW, src_factor=0)
+            b.loop_begin(oht_c * OW, dst_factor=1, src_factor=0)
+            b.push(dst=acc_base, src=0)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(build, key=f"cvrst.{shape}.{ocbt_c}.{oht_c}.{acc_base}")
+
+    def alu_kernel(ocbt_c, oht_c, acc_base, src_base, s_fo, s_fi, tag) -> UopKernel:
+        def build(b: UopBuilder):
+            b.loop_begin(ocbt_c, dst_factor=oht * OW, src_factor=s_fo)
+            b.loop_begin(oht_c * OW, dst_factor=1, src_factor=s_fi)
+            b.push(dst=acc_base, src=src_base)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(
+            build, key=f"cvalu.{shape}.{tag}.{ocbt_c}.{oht_c}.{acc_base}.{src_base}.{s_fo}.{s_fi}")
+
+    n_oh, n_oc, n_cb = _ceil_div(OH, oht), _ceil_div(OCb, ocbt), _ceil_div(Cb, cbt)
+
+    def tile_program(coord, t):
+        """Phase generator for one (nb, oh-tile, oc-tile); see
+        scheduler.interleave_virtual_threads for the pairing argument."""
+        nb, ot, jt = coord
+        d = deps[t]
+        oh0 = ot * oht
+        oht_c = min(oht, OH - oh0)
+        iht_c = (oht_c - 1) * S + KH
+        ocb0 = jt * ocbt
+        ocbt_c = min(ocbt, OCb - ocb0)
+        acc_base = t * acc_ctx
+        bias_sram = t * acc_ctx + oht * OW * ocbt
+        inp_base0 = t * inp_ctx
+        wgt_base0 = t * wgt_ctx
+
+        first = True
+        for kt in range(n_cb):
+            cb0 = kt * cbt
+            cbt_c = min(cbt, Cb - cb0)
+            # ---- load group ----
+            d.begin_load_group(rt)
+            h_start = oh0 * S - pad
+            y_pad_0 = max(0, -h_start)
+            y_pad_1 = max(0, h_start + iht_c - H)
+            y_size = iht_c - y_pad_0 - y_pad_1
+            for cb in range(cbt_c):
+                plane = x_base + ((nb * Cb + cb0 + cb) * H
+                                  + (h_start + y_pad_0)) * W
+                rt.load_buffer_2d(
+                    MemId.INP, inp_base0 + cb * iht * IWp,
+                    plane, y_size=y_size, x_size=W, x_stride=W,
+                    y_pad_0=y_pad_0, y_pad_1=y_pad_1,
+                    x_pad_0=pad, x_pad_1=pad)
+            rt.load_buffer_2d(
+                MemId.WGT, wgt_base0,
+                w_base + ((ocb0 * Cb + cb0) * KH) * KW,
+                y_size=ocbt_c, x_size=cbt_c * KH * KW,
+                x_stride=Cb * KH * KW)
+            d.end_load_group(rt)
+            yield
+            # ---- compute group ----
+            d.begin_compute_group(rt, pops_acc=first)
+            if first:
+                rt.push_gemm(reset_kernel(ocbt_c, oht_c, acc_base),
+                             reset=True)
+                if b_base >= 0:
+                    rt.load_buffer_2d(MemId.ACC, bias_sram,
+                                      b_base + ocb0, y_size=1,
+                                      x_size=ocbt_c, x_stride=OCb)
+                first = False
+            for oh_l in range(oht_c):
+                rt.push_gemm(gemm_kernel(oh_l, cbt_c, ocbt_c,
+                                         acc_base, inp_base0, wgt_base0))
+            d.end_compute_group_frees_loads(rt)
+            yield
+
+        # ---- epilogue ----
+        if b_base >= 0:
+            rt.push_alu(alu_kernel(ocbt_c, oht_c, acc_base, bias_sram,
+                                   1, 0, "bias"),
+                        op=AluOp.ADD, use_imm=False)
+        if ep.shift:
+            rt.push_alu(alu_kernel(ocbt_c, oht_c, acc_base, acc_base,
+                                   oht * OW, 1, "self"),
+                        op=AluOp.SHR, imm=ep.shift)
+        if ep.relu:
+            rt.push_alu(alu_kernel(ocbt_c, oht_c, acc_base, acc_base,
+                                   oht * OW, 1, "self"),
+                        op=AluOp.MAX, imm=0)
+        if ep.clip_lo is not None:
+            rt.push_alu(alu_kernel(ocbt_c, oht_c, acc_base, acc_base,
+                                   oht * OW, 1, "self"),
+                        op=AluOp.MAX, imm=ep.clip_lo)
+            rt.push_alu(alu_kernel(ocbt_c, oht_c, acc_base, acc_base,
+                                   oht * OW, 1, "self"),
+                        op=AluOp.MIN, imm=ep.clip_hi)
+        # ---- store: one 2D store per output-channel block ----
+        d.compute_to_store(rt)
+        d.begin_store(rt)
+        for ocb in range(ocbt_c):
+            rt.store_buffer_2d(
+                acc_base + ocb * oht * OW,
+                ((nb * OCb + ocb0 + ocb) * OH + oh0) * OW + y_base,
+                y_size=oht_c, x_size=OW, x_stride=OW)
+        d.end_store(rt)
+        yield
+
+    tiles = [(nb, ot, jt) for nb in range(Nb)
+             for ot in range(n_oh) for jt in range(n_oc)]
+    interleave_virtual_threads(tiles, vt, tile_program)
+
+    return ConvPlan(shape=shape, tiles=(oht, ocbt, cbt), x_addr=x_addr,
+                    w_addr=w_addr, y_addr=y_addr, Nb=Nb, Cb=Cb, OCb=OCb)
+
+
+def read_conv_result(rt: Runtime, plan: ConvPlan) -> np.ndarray:
+    spec = rt.spec
+    s = plan.shape
+    blocked = rt.copy_from_device(
+        plan.y_addr,
+        plan.Nb * plan.OCb * s.oh * s.ow * spec.out_elem_bytes, np.int8,
+        (plan.Nb, plan.OCb, s.oh, s.ow, spec.batch, spec.block_out))
+    return layout.unpack_conv_out(blocked, s.n, s.oc, s.oh, s.ow, spec)
+
+
+def conv2d_reference(x: np.ndarray, w: np.ndarray, shape: ConvShape,
+                     epilogue: Optional[Epilogue] = None,
+                     spec: Optional[HardwareSpec] = None) -> np.ndarray:
+    """Pure-numpy integer oracle."""
+    ep = epilogue or Epilogue()
+    S, KH, KW, pad = shape.stride, shape.kh, shape.kw, shape.pad
+    xp = np.pad(x.astype(np.int64),
+                ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    OH, OW = shape.oh, shape.ow
+    acc = np.zeros((shape.n, shape.oc, OH, OW), np.int64)
+    for kh in range(KH):
+        for kw in range(KW):
+            xs = xp[:, :, kh:kh + OH * S:S, kw:kw + OW * S:S]
+            acc += np.einsum("nchw,oc->nohw", xs, w[:, :, kh, kw].astype(np.int64))
+    if ep.bias_blocked is not None:
+        flat = ep.bias_blocked[:, 0, :].reshape(-1)[:shape.oc]
+        acc += flat.astype(np.int64)[None, :, None, None]
+    if ep.shift:
+        acc = acc >> ep.shift
+    if ep.relu:
+        acc = np.maximum(acc, 0)
+    if ep.clip_lo is not None:
+        acc = np.clip(acc, ep.clip_lo, ep.clip_hi)
+    return acc.astype(np.int32).astype(np.int8)

@@ -1,0 +1,87 @@
+"""Simulated device driver: DRAM address space + control handshake.
+
+Models the pieces of the FPGA platform the runtime needs (§3.2): a
+physically-contiguous DRAM allocator (VTABufferAlloc), typed load/store
+views for DMA, and the fetch-module control registers (§2.4: `control`,
+`insn_count`, `insns`).  On real hardware these are AXI/MMIO; here they
+drive the behavioural simulator.  Cache flush/invalidate (non-coherent
+SoCs) are modelled as no-op hooks with counters so the runtime code path
+stays faithful and testable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class Dram:
+    """Flat byte-addressed DRAM with a bump allocator (physically contiguous
+    buffers, as required by VTA's DMA engines)."""
+
+    def __init__(self, size: int = 1 << 28, align: int = 64):
+        self.size = size
+        self.align = align
+        self.mem = np.zeros(size, dtype=np.uint8)
+        self._next = align  # keep address 0 as a null sentinel
+        self._allocs: Dict[int, int] = {}
+
+    def alloc(self, nbytes: int, align: int | None = None) -> int:
+        a = max(self.align, align or 1)
+        addr = (self._next + a - 1) // a * a
+        if addr + nbytes > self.size:
+            raise MemoryError(f"DRAM exhausted: {addr + nbytes} > {self.size}")
+        self._next = addr + nbytes
+        self._allocs[addr] = nbytes
+        return addr
+
+    def free(self, addr: int) -> None:
+        self._allocs.pop(addr, None)  # bump allocator: bookkeeping only
+
+    # -- typed access ---------------------------------------------------
+    def write(self, addr: int, arr: np.ndarray) -> None:
+        b = np.ascontiguousarray(arr).view(np.uint8).ravel()
+        self.mem[addr:addr + b.size] = b
+
+    def read(self, addr: int, nbytes: int, dtype=np.uint8, shape=None) -> np.ndarray:
+        raw = self.mem[addr:addr + nbytes]
+        out = raw.view(dtype).copy()
+        return out.reshape(shape) if shape is not None else out
+
+
+@dataclass
+class ControlRegisters:
+    """fetch-module MMIO registers (§2.4)."""
+    control: int = 0       # bit0 = start, bit1 = done
+    insn_count: int = 0
+    insns: int = 0         # DRAM physical address of the instruction stream
+
+    def start(self) -> None:
+        self.control |= 1
+        self.control &= ~2
+
+    def set_done(self) -> None:
+        self.control &= ~1
+        self.control |= 2
+
+    @property
+    def done(self) -> bool:
+        return bool(self.control & 2)
+
+
+class Device:
+    """One simulated VTA device: DRAM + control registers + cache model."""
+
+    def __init__(self, dram_size: int = 1 << 28):
+        self.dram = Dram(dram_size)
+        self.regs = ControlRegisters()
+        self.cache_flushes = 0
+        self.cache_invalidates = 0
+
+    # non-coherent-SoC cache maintenance hooks (§3.2)
+    def flush_cache(self, addr: int, nbytes: int) -> None:
+        self.cache_flushes += 1
+
+    def invalidate_cache(self, addr: int, nbytes: int) -> None:
+        self.cache_invalidates += 1

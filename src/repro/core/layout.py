@@ -1,0 +1,95 @@
+"""Blocked tensor layouts for VTA DMA.
+
+VTA DMAs move *tensor-register elements*: an INP element is a
+(BATCH x BLOCK_IN) int8 block, a WGT element (BLOCK_OUT x BLOCK_IN), an
+ACC/OUT element (BATCH x BLOCK_OUT).  Host tensors are packed into blocked
+layouts so that 2D strided DMA (one instruction per tile) can address them
+— the data-layout constraint the NNVM/TVM layers enforce (§1.2, §4.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .hwspec import HardwareSpec
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
+    n = x.shape[axis]
+    pad = _ceil_div(n, mult) * mult - n
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+# ----------------------------------------------------------------------
+# matmul layouts:  A:(M,K) int8,  W:(N,K) int8,  C:(M,N)
+# ----------------------------------------------------------------------
+def pack_inp(a: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+    """(M, K) -> (Mb, Kb, BATCH, BLOCK_IN); element (mb, kb)."""
+    a = pad_to(pad_to(np.asarray(a, np.int8), 0, spec.batch), 1, spec.block_in)
+    M, K = a.shape
+    return (a.reshape(M // spec.batch, spec.batch, K // spec.block_in,
+                      spec.block_in)
+            .transpose(0, 2, 1, 3).copy())
+
+
+def pack_wgt(w: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+    """(N, K) -> (Nb, Kb, BLOCK_OUT, BLOCK_IN); element (nb, kb)."""
+    w = pad_to(pad_to(np.asarray(w, np.int8), 0, spec.block_out), 1, spec.block_in)
+    N, K = w.shape
+    return (w.reshape(N // spec.block_out, spec.block_out,
+                      K // spec.block_in, spec.block_in)
+            .transpose(0, 2, 1, 3).copy())
+
+
+def pack_acc(c: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+    """(M, N) int32 -> (Mb, Nb, BATCH, BLOCK_OUT)."""
+    c = pad_to(pad_to(np.asarray(c, np.int32), 0, spec.batch), 1, spec.block_out)
+    M, N = c.shape
+    return (c.reshape(M // spec.batch, spec.batch, N // spec.block_out,
+                      spec.block_out)
+            .transpose(0, 2, 1, 3).copy())
+
+
+def unpack_out(blocked: np.ndarray, M: int, N: int, spec: HardwareSpec) -> np.ndarray:
+    """(Mb, Nb, BATCH, BLOCK_OUT) -> (M, N)."""
+    Mb, Nb = blocked.shape[0], blocked.shape[1]
+    full = blocked.transpose(0, 2, 1, 3).reshape(Mb * spec.batch,
+                                                 Nb * spec.block_out)
+    return full[:M, :N]
+
+
+# ----------------------------------------------------------------------
+# conv2d layouts (NCHW, §2.6 / Fig. 9)
+# ----------------------------------------------------------------------
+def pack_conv_inp(x: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+    """(N, C, H, W) -> (Nb, Cb, H, W, BATCH, BLOCK_IN); element (nb,cb,h,w)."""
+    x = pad_to(pad_to(np.asarray(x, np.int8), 0, spec.batch), 1, spec.block_in)
+    N, C, H, W = x.shape
+    return (x.reshape(N // spec.batch, spec.batch, C // spec.block_in,
+                      spec.block_in, H, W)
+            .transpose(0, 2, 4, 5, 1, 3).copy())
+
+
+def pack_conv_wgt(w: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+    """(OC, IC, KH, KW) -> (OCb, ICb, KH, KW, BLOCK_OUT, BLOCK_IN)."""
+    w = pad_to(pad_to(np.asarray(w, np.int8), 0, spec.block_out), 1, spec.block_in)
+    OC, IC, KH, KW = w.shape
+    return (w.reshape(OC // spec.block_out, spec.block_out,
+                      IC // spec.block_in, spec.block_in, KH, KW)
+            .transpose(0, 2, 4, 5, 1, 3).copy())
+
+
+def unpack_conv_out(blocked: np.ndarray, N: int, OC: int, OH: int, OW: int,
+                    spec: HardwareSpec) -> np.ndarray:
+    """(Nb, OCb, OH, OW, BATCH, BLOCK_OUT) -> (N, OC, OH, OW)."""
+    Nb, OCb = blocked.shape[0], blocked.shape[1]
+    full = (blocked.transpose(0, 4, 1, 5, 2, 3)
+            .reshape(Nb * spec.batch, OCb * spec.block_out, OH, OW))
+    return full[:N, :OC]

@@ -1,0 +1,420 @@
+"""VTA scheduler: tensorization, memory scopes, virtual threading (§4).
+
+This is the TVM-analogue layer: it lowers hardware-agnostic tensor
+programs (blocked matmul, 2D convolution, elementwise epilogues) onto the
+VTA runtime API — tiling loops to the GEMM intrinsic (*tensorization*,
+§4.2), assigning tiles to data-specialized SRAM *memory scopes* with
+explicit capacity budgeting (§4.1), and lowering `virtual_threads`
+contexts into a single instruction stream with explicit RAW/WAR token
+insertion (*virtual threading*, §4.3 / Fig. 14).
+
+Dependence-token protocol (per virtual thread, Fig. 12):
+  load group  : pop c2l WAR token if this thread's context was read by a
+                previous compute group; push l2c RAW token on last load.
+  compute grp : pop l2c; on first acc write of a tile, pop s2c WAR token
+                if this context was stored before; push c2l after the last
+                instruction reading inp/wgt; push c2s before store.
+  store       : pop c2s; push s2c.
+Round-robin interleaving at tile granularity is safe because each module
+executes its queue in FIFO order (the paper's information-less tokens
+argument, §2.3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import layout
+from .hwspec import HardwareSpec
+from .isa import AluOp, MemId, COMPUTE_Q, LOAD_Q, STORE_Q
+from .runtime import Runtime, UopBuilder, UopKernel
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ----------------------------------------------------------------------
+# per-virtual-thread dependence bookkeeping
+# ----------------------------------------------------------------------
+@dataclass
+class _ThreadDeps:
+    """Tracks which WAR tokens this thread has outstanding."""
+    c2l_pending: bool = False   # compute has signalled loader (buffers free)
+    s2c_pending: bool = False   # store has signalled compute (acc free)
+
+    def begin_load_group(self, rt: Runtime) -> None:
+        if self.c2l_pending:
+            rt.dep_pop(COMPUTE_Q, LOAD_Q)
+            self.c2l_pending = False
+
+    def end_load_group(self, rt: Runtime) -> None:
+        rt.dep_push(LOAD_Q, COMPUTE_Q)
+
+    def begin_compute_group(self, rt: Runtime, pops_acc: bool) -> None:
+        rt.dep_pop(LOAD_Q, COMPUTE_Q)
+        if pops_acc and self.s2c_pending:
+            rt.dep_pop(STORE_Q, COMPUTE_Q)
+            self.s2c_pending = False
+
+    def end_compute_group_frees_loads(self, rt: Runtime) -> None:
+        rt.dep_push(COMPUTE_Q, LOAD_Q)
+        self.c2l_pending = True
+
+    def compute_to_store(self, rt: Runtime) -> None:
+        rt.dep_push(COMPUTE_Q, STORE_Q)
+
+    def begin_store(self, rt: Runtime) -> None:
+        rt.dep_pop(COMPUTE_Q, STORE_Q)   # lands on the first store insn
+
+    def end_store(self, rt: Runtime) -> None:
+        rt.dep_push(STORE_Q, COMPUTE_Q)  # flags the last store insn
+        self.s2c_pending = True
+
+
+# ----------------------------------------------------------------------
+# virtual-threading lowering (§4.3, Fig. 14)
+# ----------------------------------------------------------------------
+def interleave_virtual_threads(work_items, vt, make_program) -> None:
+    """Lower a `vt`-thread data-parallel tile program into one instruction
+    stream, interleaving threads at *phase* granularity.
+
+    `make_program(item, thread)` returns a generator that emits one
+    (load | compute | store) phase per `next()`.  Within each group of `vt`
+    consecutive tiles, phase p of thread 0 precedes phase p of thread 1,
+    etc.  This ordering is what makes VTA's information-less dependence
+    tokens safe: every module executes its queue in FIFO order, so the
+    k-th pop on a FIFO is always satisfied by the semantically matching
+    k-th push (§2.3).  Coarser interleaving (whole tiles) breaks the
+    pairing and corrupts results — covered by a regression test.
+    """
+    for g in range(0, len(work_items), vt):
+        group = work_items[g:g + vt]
+        progs = [make_program(item, t) for t, item in enumerate(group)]
+        alive = list(progs)
+        while alive:
+            for p in list(alive):
+                try:
+                    next(p)
+                except StopIteration:
+                    alive.remove(p)
+
+
+# ----------------------------------------------------------------------
+# epilogue description (tensor-ALU ops applied to the acc tile)
+# ----------------------------------------------------------------------
+@dataclass
+class Epilogue:
+    """Requantization / activation epilogue executed on the tensor ALU:
+      acc = acc + bias            (optional, per-output-channel)
+      acc = acc >> shift          (requantize, §SHR)
+      acc = min(max(acc, lo), hi) (clip; ReLU when lo=0)
+    """
+    bias_blocked: Optional[np.ndarray] = None  # (Nb, BATCH, BLOCK_OUT) int32
+    shift: int = 0
+    clip_lo: Optional[int] = -128
+    clip_hi: Optional[int] = 127
+    relu: bool = False
+
+    @property
+    def n_alu_passes(self) -> int:
+        n = 0
+        if self.bias_blocked is not None:
+            n += 1
+        if self.shift:
+            n += 1
+        if self.relu:
+            n += 1
+        if self.clip_lo is not None:
+            n += 2
+        return n
+
+
+# ----------------------------------------------------------------------
+# tile-size selection (memory-scope capacity budgeting, §4.1)
+# ----------------------------------------------------------------------
+def choose_matmul_tiles(Mb: int, Nb: int, Kb: int, spec: HardwareSpec,
+                        virtual_threads: int,
+                        bias: bool = False) -> Tuple[int, int, int]:
+    """Pick (mt, nt, kt) block-tile sizes so each virtual-thread context
+    fits its SRAM partition.  Greedy: grow kt (reduction reuse), then nt,
+    then mt."""
+    inp_cap = spec.inp_depth // virtual_threads
+    wgt_cap = spec.wgt_depth // virtual_threads
+    acc_cap = spec.acc_depth // virtual_threads
+    if bias:
+        acc_cap //= 2  # bias tile staged in the second half of the context
+
+    def fits(mt, nt, kt):
+        return (mt * kt <= inp_cap and nt * kt <= wgt_cap
+                and mt * nt <= acc_cap)
+
+    mt, nt, kt = 1, 1, 1
+    changed = True
+    while changed:
+        changed = False
+        for grow in ("kt", "nt", "mt"):
+            m2, n2, k2 = mt, nt, kt
+            if grow == "kt" and kt < Kb:
+                k2 = min(Kb, kt * 2)
+            elif grow == "nt" and nt < Nb:
+                n2 = min(Nb, nt * 2)
+            elif grow == "mt" and mt < Mb:
+                m2 = min(Mb, mt * 2)
+            if (m2, n2, k2) != (mt, nt, kt) and fits(m2, n2, k2):
+                mt, nt, kt = m2, n2, k2
+                changed = True
+    if not fits(mt, nt, kt):
+        raise ValueError("even a 1x1x1 block tile does not fit SRAM")
+    return mt, nt, kt
+
+
+# ----------------------------------------------------------------------
+# blocked matmul:  C[M,N] = clip((A[M,K] @ W[N,K]^T + bias) >> shift)
+# ----------------------------------------------------------------------
+@dataclass
+class MatmulPlan:
+    M: int
+    N: int
+    K: int
+    Mb: int
+    Nb: int
+    Kb: int
+    tiles: Tuple[int, int, int]
+    a_addr: int
+    w_addr: int
+    c_addr: int
+    bias_addr: int = -1
+
+
+def schedule_matmul(rt: Runtime, a: np.ndarray, w: np.ndarray,
+                    epilogue: Optional[Epilogue] = None,
+                    virtual_threads: int = 2) -> MatmulPlan:
+    """Lower C = A @ W^T (+epilogue) onto VTA.  Returns the plan whose
+    c_addr holds the blocked int8 result after rt.synchronize()."""
+    spec = rt.spec
+    ep = epilogue or Epilogue()
+    M, K = a.shape
+    N, K2 = w.shape
+    assert K == K2, (K, K2)
+
+    ab = layout.pack_inp(a, spec)
+    wb = layout.pack_wgt(w, spec)
+    Mb, Kb = ab.shape[0], ab.shape[1]
+    Nb = wb.shape[0]
+    a_addr = rt.copy_to_device(ab, align=spec.inp_elem_bytes)
+    w_addr = rt.copy_to_device(wb, align=spec.wgt_elem_bytes)
+    out_bytes = Mb * Nb * spec.out_elem_bytes
+    c_addr = rt.buffer_alloc(out_bytes, align=spec.out_elem_bytes)
+    bias_addr = -1
+    if ep.bias_blocked is not None:
+        bias_addr = rt.copy_to_device(
+            np.ascontiguousarray(ep.bias_blocked, dtype=np.int32),
+            align=spec.acc_elem_bytes)
+
+    mt, nt, kt = choose_matmul_tiles(Mb, Nb, Kb, spec, virtual_threads,
+                                     bias=ep.bias_blocked is not None)
+    vt = virtual_threads
+    inp_ctx = spec.inp_depth // vt
+    wgt_ctx = spec.wgt_depth // vt
+    acc_ctx = spec.acc_depth // vt
+    deps = [_ThreadDeps() for _ in range(vt)]
+
+    a_base = rt.to_elem_addr(a_addr, MemId.INP)
+    w_base = rt.to_elem_addr(w_addr, MemId.WGT)
+    c_base = rt.to_elem_addr(c_addr, MemId.OUT)
+    b_base = rt.to_elem_addr(bias_addr, MemId.ACC) if bias_addr >= 0 else -1
+
+    n_m, n_n, n_k = _ceil_div(Mb, mt), _ceil_div(Nb, nt), _ceil_div(Kb, kt)
+
+    # JIT one GEMM micro-kernel per (tile-shape, context); LRU-cached.
+    def gemm_kernel(mtt, ntt, ktt, acc_base, inp_base, wgt_base) -> UopKernel:
+        def build(b: UopBuilder):
+            b.loop_begin(mtt, dst_factor=ntt, src_factor=ktt, wgt_factor=0)
+            b.loop_begin(ntt, dst_factor=1, src_factor=0, wgt_factor=ktt)
+            for k in range(ktt):
+                b.push(dst=acc_base, src=inp_base + k, wgt=wgt_base + k)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(build,
+                             key=f"mm.{mtt}.{ntt}.{ktt}.{acc_base}.{inp_base}.{wgt_base}")
+
+    def reset_kernel(mtt, ntt, acc_base) -> UopKernel:
+        def build(b: UopBuilder):
+            b.loop_begin(mtt, dst_factor=ntt, src_factor=0)
+            b.loop_begin(ntt, dst_factor=1, src_factor=0)
+            b.push(dst=acc_base, src=0)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(build, key=f"rst.{mtt}.{ntt}.{acc_base}")
+
+    def alu_tile_kernel(mtt, ntt, acc_base, src_base, src_fo, src_fi, tag) -> UopKernel:
+        def build(b: UopBuilder):
+            b.loop_begin(mtt, dst_factor=ntt, src_factor=src_fo)
+            b.loop_begin(ntt, dst_factor=1, src_factor=src_fi)
+            b.push(dst=acc_base, src=src_base)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(build,
+                             key=f"alu.{tag}.{mtt}.{ntt}.{acc_base}.{src_base}.{src_fo}.{src_fi}")
+
+    def tile_program(i: int, j: int, t: int):
+        """Phase generator for one macro tile executed on virtual thread t.
+        Yields once per (load group | compute group | store) phase so the
+        driver can interleave threads at *phase granularity* — required for
+        the information-less token pairing to be safe (Fig. 14)."""
+        d = deps[t]
+        mtt = min(mt, Mb - i * mt)
+        ntt = min(nt, Nb - j * nt)
+        acc_base = t * acc_ctx
+        bias_sram = t * acc_ctx + mt * nt  # second half of the acc context
+        inp_base0 = t * inp_ctx
+        wgt_base0 = t * wgt_ctx
+
+        first_compute_of_tile = True
+        for kk in range(n_k):
+            ktt = min(kt, Kb - kk * kt)
+            # ---- load group ----
+            d.begin_load_group(rt)
+            rt.load_buffer_2d(MemId.INP, inp_base0,
+                              a_base + (i * mt) * Kb + kk * kt,
+                              y_size=mtt, x_size=ktt, x_stride=Kb)
+            rt.load_buffer_2d(MemId.WGT, wgt_base0,
+                              w_base + (j * nt) * Kb + kk * kt,
+                              y_size=ntt, x_size=ktt, x_stride=Kb)
+            d.end_load_group(rt)
+            yield
+            # ---- compute group ----
+            d.begin_compute_group(rt, pops_acc=first_compute_of_tile)
+            if first_compute_of_tile:
+                rt.push_gemm(reset_kernel(mtt, ntt, acc_base), reset=True)
+                if ep.bias_blocked is not None:
+                    # stage bias into the spare half of the acc context
+                    rt.load_buffer_2d(MemId.ACC, bias_sram,
+                                      b_base + j * nt,
+                                      y_size=1, x_size=ntt, x_stride=Nb)
+                first_compute_of_tile = False
+            rt.push_gemm(gemm_kernel(mtt, ntt, ktt, acc_base,
+                                     inp_base0, wgt_base0))
+            d.end_compute_group_frees_loads(rt)
+            yield
+
+        # ---- epilogue on the tensor ALU ----
+        if ep.bias_blocked is not None:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, bias_sram,
+                                        0, 1, "bias"),
+                        op=AluOp.ADD, use_imm=False)
+        if ep.shift:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        ntt, 1, "self"),
+                        op=AluOp.SHR, imm=ep.shift)
+        if ep.relu:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        ntt, 1, "self"),
+                        op=AluOp.MAX, imm=0)
+        if ep.clip_lo is not None:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        ntt, 1, "self"),
+                        op=AluOp.MAX, imm=ep.clip_lo)
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        ntt, 1, "self"),
+                        op=AluOp.MIN, imm=ep.clip_hi)
+        # ---- store ----
+        d.compute_to_store(rt)
+        d.begin_store(rt)
+        rt.store_buffer_2d(acc_base, c_base + (i * mt) * Nb + j * nt,
+                           y_size=mtt, x_size=ntt, x_stride=Nb)
+        d.end_store(rt)
+        yield
+
+    tiles = [(i, j) for i in range(n_m) for j in range(n_n)]
+    interleave_virtual_threads(
+        tiles, vt, lambda coord, t: tile_program(coord[0], coord[1], t))
+
+    return MatmulPlan(M=M, N=N, K=K, Mb=Mb, Nb=Nb, Kb=Kb, tiles=(mt, nt, kt),
+                      a_addr=a_addr, w_addr=w_addr, c_addr=c_addr,
+                      bias_addr=bias_addr)
+
+
+def read_matmul_result(rt: Runtime, plan: MatmulPlan) -> np.ndarray:
+    spec = rt.spec
+    blocked = rt.copy_from_device(
+        plan.c_addr, plan.Mb * plan.Nb * spec.out_elem_bytes, np.int8,
+        (plan.Mb, plan.Nb, spec.batch, spec.block_out))
+    return layout.unpack_out(blocked, plan.M, plan.N, spec)
+
+
+def matmul_reference(a: np.ndarray, w: np.ndarray,
+                     epilogue: Optional[Epilogue] = None,
+                     spec: Optional[HardwareSpec] = None) -> np.ndarray:
+    """Pure-numpy oracle with identical integer semantics."""
+    ep = epilogue or Epilogue()
+    acc = a.astype(np.int64) @ w.astype(np.int64).T
+    if ep.bias_blocked is not None and spec is not None:
+        bias = ep.bias_blocked  # (Nb, BATCH, BLOCK_OUT): batch rows identical
+        flat = bias[:, 0, :].reshape(-1)[:w.shape[0]]
+        acc = acc + flat.astype(np.int64)[None, :]
+    if ep.shift:
+        acc = acc >> ep.shift
+    if ep.relu:
+        acc = np.maximum(acc, 0)
+    if ep.clip_lo is not None:
+        acc = np.clip(acc, ep.clip_lo, ep.clip_hi)
+    return acc.astype(np.int32).astype(np.int8)  # truncating out-store
+
+
+# ----------------------------------------------------------------------
+# elementwise vector ops (the Listing-1 vector-add path)
+# ----------------------------------------------------------------------
+def schedule_vector_binop(rt: Runtime, a: np.ndarray, b: np.ndarray,
+                          op: AluOp = AluOp.ADD) -> Tuple[int, Tuple[int, ...]]:
+    """C = a (op) b over int32 vectors via the tensor ALU (Listing 1)."""
+    spec = rt.spec
+    lane = spec.batch * spec.block_out
+    a = np.asarray(a, np.int32).ravel()
+    b = np.asarray(b, np.int32).ravel()
+    n = a.size
+    ne = _ceil_div(n, lane)
+    ab = np.zeros((ne, spec.batch, spec.block_out), np.int32)
+    bb = np.zeros_like(ab)
+    ab.reshape(-1)[:n] = a
+    bb.reshape(-1)[:n] = b
+    a_addr = rt.copy_to_device(ab, align=spec.acc_elem_bytes)
+    b_addr = rt.copy_to_device(bb, align=spec.acc_elem_bytes)
+    c_addr = rt.buffer_alloc(ne * spec.out_elem_bytes, align=spec.out_elem_bytes)
+
+    cap = spec.acc_depth // 2
+    done = 0
+    while done < ne:
+        cur = min(cap, ne - done)
+        # both operands staged via the compute module's ACC-load path
+        rt.load_buffer_2d(MemId.ACC, 0, rt.to_elem_addr(a_addr, MemId.ACC) + done,
+                          y_size=1, x_size=cur, x_stride=cur)
+        rt.load_buffer_2d(MemId.ACC, cap, rt.to_elem_addr(b_addr, MemId.ACC) + done,
+                          y_size=1, x_size=cur, x_stride=cur)
+
+        def build(bu: UopBuilder, cur=cur):
+            bu.loop_begin(cur, dst_factor=1, src_factor=1)
+            bu.push(dst=0, src=cap)
+            bu.loop_end()
+        rt.push_alu(rt.uop_kernel(build, key=f"vec.{op}.{cur}.{cap}"),
+                    op=op, use_imm=False)
+        rt.dep_push(COMPUTE_Q, STORE_Q)
+        rt.dep_pop(COMPUTE_Q, STORE_Q)
+        rt.store_buffer_2d(0, rt.to_elem_addr(c_addr, MemId.OUT) + done,
+                           y_size=1, x_size=cur, x_stride=cur)
+        rt.dep_push(STORE_Q, COMPUTE_Q)
+        rt.dep_pop(STORE_Q, COMPUTE_Q)  # consumed by next iteration's ACC load
+        done += cur
+    # the trailing s2c token is consumed by... nothing: balance it by
+    # removing the last push/pop pair cleanly:
+    return c_addr, (ne, spec.batch, spec.block_out)
+
+
+def read_vector_result(rt: Runtime, c_addr: int, shape: Tuple[int, ...],
+                       n: int) -> np.ndarray:
+    ne = shape[0]
+    spec = rt.spec
+    blocked = rt.copy_from_device(c_addr, ne * spec.out_elem_bytes, np.int8,
+                                  (ne, spec.batch, spec.block_out))
+    return blocked.reshape(-1)[:n]

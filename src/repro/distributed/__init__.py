@@ -1,0 +1,3 @@
+"""Distributed substrate: mesh context, sharding rules, checkpointing
+helpers, fault tolerance, gradient compression."""
+from . import meshctx  # noqa: F401

@@ -1,0 +1,231 @@
+"""Parameter/optimizer/cache sharding rules (TP + FSDP + EP).
+
+Maps every parameter leaf to a PartitionSpec by name-based rules with
+divisibility fallbacks:
+  * TP ("model" axis): attention heads, FFN hidden, MoE experts, vocab;
+  * FSDP (ZeRO-3, over the data axes): the complementary large dim —
+    required for kimi-k2 (1T params: 2 TB bf16 must spread over all 512
+    chips, not 16);
+  * small/odd leaves (norms, scalars, conv taps) replicate.
+
+The same spec tree shards optimizer states (they mirror params) and is
+what restore-time resharding (elastic restart) targets.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _fits(shape, dim: int, mesh: Mesh, entry) -> bool:
+    if entry is None or dim >= len(shape):
+        return False
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        if a not in mesh.shape:
+            return False
+        n *= mesh.shape[a]
+    return shape[dim] % n == 0 and shape[dim] >= n
+
+
+def _spec(shape, mesh, assignments) -> P:
+    """assignments: list of (dim, axis_entry) — applied when divisible,
+    falling back to the largest dividing prefix of a multi-axis entry."""
+    out = [None] * len(shape)
+    used = set()
+    for dim, entry in assignments:
+        if entry is None:
+            continue
+        names = tuple(entry) if isinstance(entry, tuple) else (entry,)
+        names = tuple(a for a in names if a not in used)
+        while names:
+            cand = names if len(names) > 1 else names[0]
+            if _fits(shape, dim, mesh, cand):
+                out[dim] = cand
+                used.update(names)
+                break
+            names = names[:-1]
+    return P(*out)
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh,
+                fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching `params`."""
+    sc = cfg.sharding
+    model = sc.model_axis if sc.model_axis in mesh.shape else None
+    fsdp_axes: Optional[Tuple[str, ...]] = None
+    if fsdp:
+        axes = tuple(a for a in (sc.fsdp_axes or sc.data_axes)
+                     if a in mesh.shape)
+        fsdp_axes = axes if axes else None
+
+    def leaf_spec(path: str, x) -> P:
+        shape = x.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        L = 1 if "layers/" in path else 0  # stacked leading layer dim
+
+        def d(i):   # dim index offset by the stacked layer dim
+            return L + i
+
+        last = path.split("/")[-1]
+        if last in ("w", "w_q"):
+            lname = path.split("/")[-2]
+        else:
+            lname = last
+        if last == "w_scale":       # per-channel PTQ scales: tiny, replicate
+            return P()
+        if "norm" in path or lname in ("scale", "bias", "A_log", "D",
+                                       "dt_bias", "conv_w", "conv_b", "r"):
+            return P()
+        if path.startswith("embed/tokens"):
+            return _spec(shape, mesh, [(0, model), (1, fsdp_axes)])
+        if path.startswith("embed/pos"):
+            return _spec(shape, mesh, [(1, fsdp_axes)])
+        if path.startswith("lm_head"):
+            return _spec(shape, mesh, [(1, model), (0, fsdp_axes)])
+        # --- MoE experts: EP over model on the expert dim ---
+        if "/moe/" in path or "/shared/" in path:
+            if lname in ("wi", "wg") and nd == d(3):
+                return _spec(shape, mesh, [(d(0), model), (d(1), fsdp_axes)])
+            if lname == "wo" and nd == d(3):
+                return _spec(shape, mesh, [(d(0), model), (d(2), fsdp_axes)])
+            if lname == "router" or "/router/" in path:
+                return _spec(shape, mesh, [(d(0), fsdp_axes)])
+            if lname in ("wi", "wg"):   # shared-expert dense mlp (L, d, f)
+                return _spec(shape, mesh, [(d(1), model), (d(0), fsdp_axes)])
+            if lname == "wo":
+                return _spec(shape, mesh, [(d(0), model), (d(1), fsdp_axes)])
+        # --- attention projections ---
+        if lname in ("wq", "wk", "wv"):
+            return _spec(shape, mesh, [(d(1), model), (d(0), fsdp_axes)])
+        if lname == "wo":
+            return _spec(shape, mesh, [(d(0), model), (d(1), fsdp_axes)])
+        # --- dense MLP ---
+        if lname in ("wi", "wg"):
+            return _spec(shape, mesh, [(d(1), model), (d(0), fsdp_axes)])
+        # --- mamba / xlstm projections: TP-free (small), FSDP on d ---
+        if lname in ("in_proj", "up_x", "up_z", "w_in"):
+            return _spec(shape, mesh, [(d(0), fsdp_axes)])
+        if lname in ("out_proj", "down"):
+            return _spec(shape, mesh, [(d(1), fsdp_axes)])
+        if lname == "w_if":
+            return _spec(shape, mesh, [(d(0), fsdp_axes)])
+        # generic fallback: try model on the last dim, fsdp on the first
+        return _spec(shape, mesh, [(nd - 1, model), (max(0, nd - 2), fsdp_axes)])
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths_specs = {}
+
+    def path_str(kp) -> str:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+
+    leaves, treedef = flat
+    specs = [leaf_spec(path_str(kp), leaf) for kp, leaf in leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def opt_state_specs(opt_state: Any, param_spec_tree: Any,
+                    params_shapes: Any) -> Any:
+    """Optimizer-state PartitionSpecs.
+
+    AdamW m/v mirror the params exactly.  Adafactor's factored moments
+    drop one trailing dim: vr = spec[:-1], vc = spec[:-2] + spec[-1:];
+    factoring only happens for >=2-D params (see optimizers._factored).
+    Scalars (count) replicate."""
+    out = {}
+    for k, v in opt_state.items():
+        if k == "count":
+            out[k] = P()
+        elif k == "m":
+            out[k] = param_spec_tree        # mirrors params exactly
+        elif k == "v":
+            leaves = jax.tree_util.tree_leaves(
+                v, is_leaf=lambda x: isinstance(x, dict)
+                and set(x) <= {"vr", "vc", "v"})
+            if leaves and isinstance(leaves[0], dict):   # Adafactor
+                def per_param(sp, shape_leaf):
+                    entries = list(sp) + [None] * (
+                        len(shape_leaf.shape) - len(list(sp)))
+                    if len(shape_leaf.shape) >= 2 and \
+                            shape_leaf.shape[-1] > 1 and shape_leaf.shape[-2] > 1:
+                        return {"vr": P(*entries[:-1]),
+                                "vc": P(*(entries[:-2] + entries[-1:]))}
+                    return {"v": P(*entries)}
+                out[k] = jax.tree.map(
+                    per_param, param_spec_tree, params_shapes,
+                    is_leaf=lambda x: isinstance(x, P))
+            else:                                        # AdamW
+                out[k] = param_spec_tree
+        else:
+            out[k] = jax.tree.map(lambda _: P(), v)
+    return out
+
+
+def cache_specs(caches: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """KV caches: shard batch over data axes, kv-heads over model when
+    divisible; SSM states: batch over data."""
+    sc = cfg.sharding
+    data = tuple(a for a in sc.data_axes if a in mesh.shape) or None
+    model = sc.model_axis if sc.model_axis in mesh.shape else None
+
+    def leaf(x) -> P:
+        shape = x.shape
+        if len(shape) == 5:
+            # (L, B, S, KH, D) kv cache: batch over data; kv-heads over
+            # model when divisible, else the SEQ dim over model (GSPMD
+            # flash-decoding: partial softmax per shard + tiny combine) —
+            # without this, GQA caches with KH < TP replicate 16x.
+            assignments = [(1, data)]
+            if model is not None and shape[3] % mesh.shape[model] == 0:
+                assignments.append((3, model))
+            else:
+                assignments.append((2, model))
+            return _spec(shape, mesh, assignments)
+        if len(shape) >= 2:
+            return _spec(shape, mesh, [(1, data)])
+        return P()
+
+    return jax.tree.map(leaf, caches)
+
+
+def batch_specs(batch_shapes: Dict[str, Any], cfg: ModelConfig,
+                mesh: Mesh) -> Dict[str, P]:
+    sc = cfg.sharding
+    data = tuple(a for a in sc.data_axes if a in mesh.shape) or None
+    out = {}
+    for k, v in batch_shapes.items():
+        shape = v.shape if hasattr(v, "shape") else v
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and data is not None:
+            names = data
+            while names:   # largest dividing prefix (see meshctx.constrain)
+                n = 1
+                for a in names:
+                    n *= mesh.shape[a]
+                if shape[0] % n == 0:
+                    spec[0] = names if len(names) > 1 else names[0]
+                    break
+                names = names[:-1]
+        out[k] = P(*spec)
+    return out

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Each kernel ships three files: kernel.py (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ops.py (jit'd public wrapper with pallas/oracle
+dispatch), ref.py (pure-jnp oracle).  All kernels validate in
+interpret=True mode on CPU; TPU is the compilation target.
+"""
+from . import (decode_attention, flash_attention, gla_chunk,  # noqa: F401
+               tensor_alu, vta_gemm)

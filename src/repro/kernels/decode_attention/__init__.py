@@ -1,0 +1,3 @@
+from .kernel import decode_attention_pallas  # noqa: F401
+from .ops import decode_attention  # noqa: F401
+from .ref import decode_attention_ref  # noqa: F401

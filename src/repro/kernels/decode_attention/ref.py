@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for single-step decode attention with length masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q: (B*KH, G, D); k/v: (B*KH, S, D); kv_len: () or (1,) int32."""
+    BH, G, D = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("hgd,hkd->hgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    valid = jnp.arange(S)[None, None, :] < jnp.reshape(kv_len, ())
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgk,hkd->hgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref_4d(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array,
+                            kv_len: jax.Array) -> jax.Array:
+    """Cache-native layout: NO transpose of the (huge) KV cache.
+
+    q: (B, 1, HQ, D); caches: (B, S, KH, D).  The cache seq dim can be
+    sharded (GSPMD-native flash-decoding: the softmax over a sharded S
+    lowers to per-shard partials + a tiny all-reduce combine).
+    Returns (B, 1, HQ, D)."""
+    B, _, HQ, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = HQ // KH
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32) / (D ** 0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    valid = (jnp.arange(S) < jnp.reshape(kv_len, ()))[None, None, None, :]
+    s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, HQ, D).astype(q.dtype)

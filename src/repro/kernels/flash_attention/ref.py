@@ -1,0 +1,90 @@
+"""Pure-jnp oracles: exact softmax attention with GQA + causal mask.
+
+Two forms:
+  * attention_ref        — materialized (S, Sk) scores; the test oracle.
+  * attention_ref_chunked — lax.scan over kv blocks with running softmax
+    (flash semantics in plain XLA).  Used on the dry-run path for long
+    sequences: peak memory is one (S, bk) block instead of (S, Sk), and
+    cost_analysis still sees real FLOPs (unlike an opaque Pallas call).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  group: int, causal: bool = True) -> jax.Array:
+    """q: (B*HQ, S, D); k/v: (B*KH, S, D); group = HQ // KH."""
+    BH, S, D = q.shape
+    kv = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kv.astype(jnp.float32)) / (D ** 0.5)
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.tril(jnp.ones((S, Sk), bool), k=Sk - S)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_ref_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          group: int, causal: bool = True,
+                          bk: int = 1024) -> jax.Array:
+    """Flash-style running softmax over kv blocks, pure XLA (lax.scan).
+
+    Operates on the native (B, S, H, D) layout with NO (B*H) merge or
+    transpose: merged-dim reshapes of differently-sharded dims trigger
+    GSPMD "involuntary full rematerialization" (full-tensor all-gathers).
+    Under the production mesh the q sequence dim is sharded over "model"
+    (sequence parallelism — rows of the softmax are independent), the
+    batch dim over the data axes; each kv block is broadcast, which is
+    the cheap direction (bk*D per step vs S*d activations).
+    """
+    B, S, HQ, D = q.shape
+    _, Sk, KH, _ = k.shape
+    bk = min(bk, Sk)
+    if Sk % bk:
+        # non-power-of-two kv length (e.g. whisper's 1500 encoder frames):
+        # fall back to one block if small, else the largest even divisor
+        if Sk <= 4096:
+            bk = Sk
+        else:
+            bk = next(b for b in range(bk, 0, -1) if Sk % b == 0)
+    nk = Sk // bk
+    scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kb = k.astype(jnp.float32).reshape(B, nk, bk, KH, D).swapaxes(0, 1)
+    vb = v.astype(jnp.float32).reshape(B, nk, bk, KH, D).swapaxes(0, 1)
+    # absolute position of each q row (cache prefix of Sk - S tokens)
+    q_pos = (jnp.arange(S) + (Sk - S))[None, None, :, None]   # (1,1,S,1)
+    qg = qf.reshape(B, S, KH, group, D)
+
+    def body(carry, blk):
+        m, l, acc, j = carry
+        kj, vj = blk                                  # (B, bk, KH, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj)   # (B,KH,G,S,bk)
+        s = s.reshape(B, HQ, S, bk)
+        if causal:
+            k_pos = j * bk + jnp.arange(bk)[None, None, None, :]
+            s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd",
+                        p.reshape(B, KH, group, S, bk), vj)
+        acc = acc * jnp.moveaxis(alpha, 1, 2) + pv.reshape(B, S, HQ, D)
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((B, HQ, S, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, HQ, S, 1), jnp.float32)
+    acc0 = jnp.zeros((B, S, HQ, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, jnp.int32(0)),
+                                     (kb, vb))
+    out = acc / jnp.moveaxis(jnp.maximum(l, 1e-30), 1, 2)
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from .kernel import gla_chunk_pallas  # noqa: F401
+from .ops import gla_chunk  # noqa: F401
+from .ref import gla_chunk_ref  # noqa: F401

@@ -1,0 +1,22 @@
+"""Oracle: the model-layer chunked_gla (itself validated against the
+step-by-step recurrence) reshaped to the kernel's (BH, nc, Q, ...) layout."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.ssm import chunked_gla
+
+
+def gla_chunk_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  la: jax.Array, h0: jax.Array):
+    """Same signature as gla_chunk_pallas."""
+    BH, nc, Q, N = q.shape
+    P_ = v.shape[-1]
+    S = nc * Q
+    # (BH, nc, Q, X) -> (BH, S, 1, X): treat BH as batch, single head
+    qs = q.reshape(BH, S, 1, N)
+    ks = k.reshape(BH, S, 1, N)
+    vs = v.reshape(BH, S, 1, P_)
+    las = la.reshape(BH, S, 1)
+    y, h = chunked_gla(qs, ks, vs, las, chunk=Q, h0=h0[:, None])
+    return y.reshape(BH, nc, Q, P_).astype(q.dtype), h[:, 0]

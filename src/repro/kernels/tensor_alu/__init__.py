@@ -1,0 +1,3 @@
+from .kernel import tensor_alu_pallas  # noqa: F401
+from .ops import requantize, tensor_alu  # noqa: F401
+from .ref import tensor_alu_ref  # noqa: F401

@@ -1,0 +1,25 @@
+"""Public op wrapper for the VTA tensor ALU."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import tensor_alu_pallas
+from .ref import tensor_alu_ref
+
+
+def tensor_alu(dst: jax.Array, src: Optional[jax.Array] = None,
+               *, chain: Tuple[Tuple[str, Optional[int]], ...],
+               use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    if not use_pallas:
+        return tensor_alu_ref(dst, src, chain=chain)
+    return tensor_alu_pallas(dst, src, chain=chain, interpret=interpret)
+
+
+def requantize(acc: jax.Array, shift: int, lo: int = -128,
+               hi: int = 127, **kw) -> jax.Array:
+    """The canonical VTA epilogue: SHR then clip (MIN/MAX pair)."""
+    return tensor_alu(acc, chain=(("shr", shift), ("max", lo), ("min", hi)),
+                      **kw)

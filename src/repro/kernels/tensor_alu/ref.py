@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the tensor ALU kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tensor_alu_ref(dst: jax.Array, src: Optional[jax.Array] = None,
+                   *, chain: Tuple[Tuple[str, Optional[int]], ...]) -> jax.Array:
+    x = dst
+    for op, imm in chain:
+        y = jnp.full_like(x, imm) if imm is not None else src
+        if op == "min":
+            x = jnp.minimum(x, y)
+        elif op == "max":
+            x = jnp.maximum(x, y)
+        elif op == "add":
+            x = x + y
+        elif op == "mul":
+            x = x * y
+        elif op == "shr":
+            x = jnp.where(y >= 0, jax.lax.shift_right_arithmetic(x, y),
+                          jax.lax.shift_left(x, -y))
+        else:
+            raise ValueError(op)
+    return x

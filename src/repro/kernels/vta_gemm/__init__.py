@@ -1,0 +1,3 @@
+from .kernel import vta_gemm_pallas  # noqa: F401
+from .ops import quantized_linear, vta_gemm  # noqa: F401
+from .ref import vta_gemm_ref  # noqa: F401

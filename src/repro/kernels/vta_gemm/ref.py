@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the VTA GEMM kernel (identical integer semantics)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def vta_gemm_ref(a: jax.Array, w: jax.Array,
+                 bias: Optional[jax.Array] = None,
+                 scale: Optional[jax.Array] = None,
+                 *, epilogue: str = "none", shift: int = 0) -> jax.Array:
+    acc = jax.lax.dot_general(
+        a.astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    if epilogue == "none":
+        return acc
+    if epilogue == "requant":
+        q = jax.lax.shift_right_arithmetic(acc, jnp.int32(shift))
+        return jnp.clip(q, -128, 127).astype(jnp.int8)
+    if epilogue == "dequant":
+        return acc.astype(jnp.float32) * scale[None, :]
+    raise ValueError(epilogue)

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod);
+  2. materializes parameter/optimizer/cache ShapeDtypeStructs (eval_shape
+     — zero allocation) with the arch's sharding rules;
+  3. jit-lowers and *compiles* the train_step / prefill / decode_step for
+     that shape — sharding mismatches, unsupported collectives, or
+     OOM-at-compile surface here as hard failures;
+  4. records memory_analysis(), cost_analysis(), and the trip-count-aware
+     HLO statistics (dot FLOPs, HBM bytes, per-class collective wire
+     bytes) into experiments/dryrun/<cell>.json for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, input_specs, list_archs
+from repro.configs.base import ArchSpec, ShapeSpec, for_shape
+from repro.distributed import meshctx
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        named_shardings, opt_state_specs,
+                                        param_specs)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import ShardingConfig
+from repro.models.quantized import quantized_param_shapes
+from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
+
+# v5e-class hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def _sharding_config(mesh, dp_over_model: bool = False) -> ShardingConfig:
+    data = data_axes_of(mesh)
+    if dp_over_model:
+        data = data + ("model",)
+    return ShardingConfig(enabled=True, data_axes=data, model_axis="model",
+                          fsdp_axes=data)
+
+
+def build_train_step(cfg, optimizer: str):
+    opt_init, opt_update = make_optimizer(optimizer)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return T.forward_train(p, cfg, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_schedule(step, 2000, 100_000, 3e-4)
+        params, opt_state = opt_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return opt_init, train_step
+
+
+def _mem_report(compiled) -> Dict[str, float]:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            if hasattr(ma, k):
+                out[k] = float(getattr(ma, k))
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    except Exception as e:   # backend without memory analysis
+        out["error"] = str(e)
+    return out
+
+
+def _cost_report(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "utilization operand 0 {}", "optimal_seconds")}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quantized: bool = False,
+             overrides: Optional[Dict[str, Any]] = None,
+             verbose: bool = True) -> Dict[str, Any]:
+    spec: ArchSpec = get_arch(arch)
+    shape: ShapeSpec = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    sc = _sharding_config(mesh, dp_over_model=getattr(spec, "dp_over_model", False))
+    cfg = for_shape(spec, shape, sharding=sc, quantized=quantized)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": shape.kind, "quantized": quantized,
+            "n_devices": n_dev, "optimizer": spec.optimizer,
+            "fsdp": spec.fsdp, "overrides": overrides or {}}
+    t0 = time.time()
+
+    with meshctx.use_mesh(mesh):
+        params_shapes = jax.eval_shape(
+            lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+        p_specs = param_specs(params_shapes, cfg, mesh, fsdp=spec.fsdp)
+        p_shard = named_shardings(p_specs, mesh)
+        batch_sds = input_specs(cfg, shape)
+        repl = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            opt_init, train_step = build_train_step(cfg, spec.optimizer)
+            opt_shapes = jax.eval_shape(opt_init, params_shapes)
+            o_specs = opt_state_specs(opt_shapes, p_specs, params_shapes)
+            o_shard = named_shardings(o_specs, mesh)
+            b_specs = batch_specs(batch_sds, cfg, mesh)
+            b_shard = {k: NamedSharding(mesh, s) for k, s in b_specs.items()}
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(train_step,
+                             in_shardings=(p_shard, o_shard, b_shard, repl),
+                             out_shardings=(p_shard, o_shard, repl),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shapes, opt_shapes, batch_sds,
+                                   step_sds)
+        else:
+            max_len = shape.seq_len
+            caches_shapes = jax.eval_shape(
+                lambda: T.init_caches(cfg, shape.global_batch, max_len,
+                                      jnp.bfloat16))
+            c_specs = cache_specs(caches_shapes, cfg, mesh)
+            c_shard = named_shardings(c_specs, mesh)
+            if quantized:
+                params_shapes = quantized_param_shapes(params_shapes)
+                p_specs = param_specs(params_shapes, cfg, mesh,
+                                      fsdp=spec.fsdp)
+                p_shard = named_shardings(p_specs, mesh)
+            if shape.kind == "prefill":
+                def prefill_step(params, batch, caches):
+                    return T.prefill(params, cfg, batch, caches)
+                b_specs = batch_specs(batch_sds, cfg, mesh)
+                b_shard = {k: NamedSharding(mesh, s)
+                           for k, s in b_specs.items()}
+                jitted = jax.jit(prefill_step,
+                                 in_shardings=(p_shard, b_shard, c_shard),
+                                 out_shardings=(repl, c_shard),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_shapes, batch_sds,
+                                       caches_shapes)
+            else:  # decode
+                def decode(params, caches, token, pos):
+                    return T.decode_step(params, cfg, caches, token, pos)
+                tok_sds = batch_sds["token"]
+                pos_sds = batch_sds["pos"]
+                tok_spec = batch_specs({"token": tok_sds}, cfg, mesh)["token"]
+                jitted = jax.jit(
+                    decode,
+                    in_shardings=(p_shard, c_shard,
+                                  NamedSharding(mesh, tok_spec), repl),
+                    out_shardings=(repl, c_shard),
+                    donate_argnums=(1,))
+                lowered = jitted.lower(params_shapes, caches_shapes,
+                                       tok_sds, pos_sds)
+
+        cell["lower_seconds"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        cell["compile_seconds"] = time.time() - t1
+
+        cell["memory"] = _mem_report(compiled)
+        cell["xla_cost"] = _cost_report(compiled)
+        t2 = time.time()
+        stats = hlo_analysis.analyze(compiled.as_text(), total_devices=n_dev)
+        cell["analyze_seconds"] = time.time() - t2
+        cell["hlo"] = {
+            "dot_flops_per_device": stats.dot_flops,
+            "memory_bytes_per_device": stats.memory_bytes,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collective_counts": stats.collective_counts,
+            "while_trip_counts": stats.while_trip_counts[:64],
+        }
+
+        # ---- roofline terms (seconds) ----
+        comp_t = stats.dot_flops / PEAK_FLOPS
+        mem_t = stats.memory_bytes / HBM_BW
+        coll_t = stats.total_collective_bytes / ICI_BW
+        dominant = max((("compute", comp_t), ("memory", mem_t),
+                        ("collective", coll_t)), key=lambda kv: kv[1])[0]
+        m = cfg
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * m.n_active_params * tokens
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * m.n_active_params * tokens
+        else:
+            tokens = shape.global_batch * 1
+            model_flops = 2.0 * m.n_active_params * tokens
+        hlo_total = stats.dot_flops * n_dev
+        cell["roofline"] = {
+            "compute_term_s": comp_t,
+            "memory_term_s": mem_t,
+            "collective_term_s": coll_t,
+            "dominant": dominant,
+            "model_flops_total": model_flops,
+            "hlo_flops_total": hlo_total,
+            "useful_flops_ratio": model_flops / hlo_total if hlo_total else 0.0,
+            "roofline_fraction": (
+                max(comp_t, 0.0) / max(comp_t, mem_t, coll_t)
+                if max(comp_t, mem_t, coll_t) > 0 else 0.0),
+        }
+        cell["n_params"] = m.n_params
+        cell["n_active_params"] = m.n_active_params
+    if verbose:
+        r = cell["roofline"]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}"
+              f"{' int8' if quantized else ''}: "
+              f"compile={cell['compile_seconds']:.1f}s "
+              f"compute={r['compute_term_s']*1e3:.2f}ms "
+              f"memory={r['memory_term_s']*1e3:.2f}ms "
+              f"collective={r['collective_term_s']*1e3:.2f}ms "
+              f"dominant={r['dominant']} "
+              f"useful={r['useful_flops_ratio']:.2f} "
+              f"mem/dev={cell['memory'].get('total_bytes_per_device', 0)/2**30:.2f}GiB",
+              flush=True)
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi_pod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quantized", action="store_true",
+                    help="int8 PTQ weights on serve cells (VTA path)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (perf loop)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi_pod": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = json.loads(args.override) if args.override else None
+
+    if args.all:
+        todo = []
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                todo.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            try:
+                cell = run_cell(arch, shape, mp, quantized=args.quantized,
+                                overrides=overrides)
+                tag = ("__int8" if args.quantized else "") + \
+                    (f"__{args.tag}" if args.tag else "")
+                name = (f"{arch}__{shape}__"
+                        f"{'multi' if mp else 'single'}{tag}.json")
+                with open(os.path.join(args.out, name), "w") as f:
+                    json.dump(cell, f, indent=1)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape, mp, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILED CELLS:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(todo) * len(meshes)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

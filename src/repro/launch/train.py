@@ -1,0 +1,172 @@
+"""Production training driver.
+
+Wires together: config registry -> sharded init -> data pipeline ->
+jit'd train step (donated params/opt) -> async checkpointing -> straggler
+watchdog -> elastic restart hooks.  On this CPU container it runs real
+training for the reduced configs (examples/train_lm.py) and serves as the
+launcher template for the production mesh (same code path the dry-run
+lowers).
+
+Usage:
+  python -m repro.launch.train --arch olmo-1b --steps 200 --reduced \\
+      --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs import get_arch, reduced as reduce_cfg
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.distributed import meshctx
+from repro.distributed.fault_tolerance import StepWatchdog
+from repro.distributed.sharding import (batch_specs, named_shardings,
+                                        opt_state_specs, param_specs)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShardingConfig
+from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
+
+
+def build_train_step(cfg: ModelConfig, optimizer: str, peak_lr: float = 3e-4,
+                     warmup: int = 100, total_steps: int = 10_000):
+    opt_init, opt_update = make_optimizer(optimizer)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return T.forward_train(p, cfg, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_schedule(step, warmup, total_steps, peak_lr)
+        params, opt_state = opt_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, dict(metrics, grad_norm=gnorm, lr=lr)
+
+    return opt_init, train_step
+
+
+class Trainer:
+    """Single-process trainer; the multi-host variant changes only the
+    data sharding + jax.distributed.initialize bootstrap."""
+
+    def __init__(self, cfg: ModelConfig, optimizer: str = "adamw",
+                 seq_len: int = 128, global_batch: int = 8,
+                 ckpt_dir: Optional[str] = None, seed: int = 0,
+                 mesh=None, fsdp: bool = False, peak_lr: float = 3e-4):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.watchdog = StepWatchdog()
+        self.ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+        self.data = SyntheticLMDataset(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            global_batch=global_batch, seed=seed))
+        opt_init, step_fn = build_train_step(cfg, optimizer, peak_lr=peak_lr)
+        key = jax.random.PRNGKey(seed)
+
+        if mesh is not None:
+            meshctx.set_mesh(mesh)
+            p_shapes = jax.eval_shape(lambda: T.init_params(key, cfg))
+            p_specs = param_specs(p_shapes, cfg, mesh, fsdp=fsdp)
+            p_shard = named_shardings(p_specs, mesh)
+            self.params = jax.jit(
+                lambda: T.init_params(key, cfg), out_shardings=p_shard)()
+            o_shapes = jax.eval_shape(opt_init, p_shapes)
+            o_specs = opt_state_specs(o_shapes, p_specs, p_shapes)
+            o_shard = named_shardings(o_specs, mesh)
+            self.opt_state = jax.jit(opt_init, out_shardings=o_shard)(
+                self.params)
+            self.p_shard, self.o_shard = p_shard, o_shard
+            self.step_fn = jax.jit(step_fn,
+                                   in_shardings=(p_shard, o_shard, None, None),
+                                   out_shardings=(p_shard, o_shard, None),
+                                   donate_argnums=(0, 1))
+        else:
+            self.params = T.init_params(key, cfg)
+            self.opt_state = opt_init(self.params)
+            self.p_shard = self.o_shard = None
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self) -> bool:
+        if self.ckpt is None:
+            return False
+        s = latest_step(self.ckpt.ckpt_dir)
+        if s is None:
+            return False
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        shard = ({"params": self.p_shard, "opt_state": self.o_shard}
+                 if self.p_shard is not None else None)
+        restored, extra = restore_checkpoint(self.ckpt.ckpt_dir, s, tree,
+                                             shardings=shard)
+        self.params = restored["params"]
+        self.opt_state = restored["opt_state"]
+        self.step = int(extra.get("step", s))
+        return True
+
+    def train(self, steps: int, log_every: int = 10,
+              ckpt_every: int = 200) -> Dict[str, list]:
+        history = {"loss": [], "step": []}
+        for _ in range(steps):
+            batch_np = self.data.batch(self.step)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            self.watchdog.start_step()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, jnp.int32(self.step))
+            loss = float(metrics["loss"])
+            self.watchdog.end_step(self.step)
+            if self.step % log_every == 0:
+                print(f"step {self.step:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+            history["loss"].append(loss)
+            history["step"].append(self.step)
+            self.step += 1
+            if self.ckpt and self.step % ckpt_every == 0:
+                self.ckpt.save(self.step,
+                               {"params": self.params,
+                                "opt_state": self.opt_state},
+                               extra={"step": self.step})
+        if self.ckpt:
+            self.ckpt.save(self.step, {"params": self.params,
+                                       "opt_state": self.opt_state},
+                           extra={"step": self.step})
+            self.ckpt.wait()
+        return history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = reduce_cfg(spec.model) if args.reduced else spec.model
+    cfg = cfg.replace(max_seq=max(cfg.max_seq, args.seq_len))
+    tr = Trainer(cfg, optimizer=spec.optimizer, seq_len=args.seq_len,
+                 global_batch=args.batch, ckpt_dir=args.ckpt_dir,
+                 peak_lr=args.lr)
+    if tr.maybe_restore():
+        print(f"restored from step {tr.step}")
+    hist = tr.train(args.steps)
+    print(f"final loss {hist['loss'][-1]:.4f} "
+          f"(start {hist['loss'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

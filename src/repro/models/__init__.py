@@ -1,0 +1,4 @@
+"""Model zoo: unified LM covering dense/GQA, MoE, Mamba2 hybrid, xLSTM,
+whisper enc-dec and VLM-backbone architectures."""
+from . import attention, config, layers, moe, ssm, transformer, xlstm  # noqa: F401
+from .config import ModelConfig, ShardingConfig  # noqa: F401

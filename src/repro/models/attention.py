@@ -1,0 +1,154 @@
+"""GQA attention with KV cache: train / prefill / decode modes."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.distributed.meshctx import constrain
+
+from .layers import apply_rope, linear_apply, linear_init
+
+Params = Dict[str, Any]
+
+
+def attn_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    return {"wq": linear_init(ks[0], d, cfg.q_dim, dt),
+            "wk": linear_init(ks[1], d, cfg.kv_dim, dt),
+            "wv": linear_init(ks[2], d, cfg.kv_dim, dt),
+            "wo": linear_init(ks[3], cfg.q_dim, d, dt)}
+
+
+def _qkv(p: Params, cfg, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    q = linear_apply(p["wq"], x, cfg).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = linear_apply(p["wk"], x, cfg).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = linear_apply(p["wv"], x, cfg).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(p: Params, cfg, x: jax.Array, *, causal: bool = True,
+               positions: Optional[jax.Array] = None) -> jax.Array:
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = flash_attention(q, k, v, causal=causal, use_pallas=cfg.use_pallas)
+    return linear_apply(p["wo"], o.reshape(B, S, cfg.q_dim), cfg)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    if cfg.kv_cache_quant:
+        # VTA-style int8 cache: per-(token, head) symmetric scales — the
+        # paper's PTQ applied to the decode-bandwidth bottleneck
+        return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                               jnp.int8),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                               jnp.int8),
+                "k_s": jnp.zeros((batch, max_len, cfg.n_kv_heads),
+                                 jnp.float32),
+                "v_s": jnp.zeros((batch, max_len, cfg.n_kv_heads),
+                                 jnp.float32)}
+    return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)}
+
+
+def _quant_kv(x: jax.Array):
+    """(B, S, KH, D) -> int8 values + (B, S, KH) scales."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                       1e-6)
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_prefill(p: Params, cfg, x: jax.Array, cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full causal pass over the prompt; writes positions [0, S) of cache."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = flash_attention(q, k, v, causal=True, use_pallas=cfg.use_pallas)
+    new_cache = dict(cache)
+    if cfg.kv_cache_quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        for name, val in (("k", kq), ("v", vq)):
+            new_cache[name] = jax.lax.dynamic_update_slice(
+                cache[name], val, (0, 0, 0, 0))
+        for name, val in (("k_s", ks), ("v_s", vs)):
+            new_cache[name] = jax.lax.dynamic_update_slice(
+                cache[name], val, (0, 0, 0))
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    return linear_apply(p["wo"], o.reshape(B, S, cfg.q_dim), cfg), new_cache
+
+
+def attn_decode(p: Params, cfg, x: jax.Array, cache: Dict[str, jax.Array],
+                pos: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step: x (B, 1, d); pos scalar int32 = current index."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    ipos = pos.astype(jnp.int32)
+    new_cache = dict(cache)
+    if cfg.kv_cache_quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kq, (0, ipos, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vq, (0, ipos, 0, 0))
+        new_cache["k_s"] = jax.lax.dynamic_update_slice(
+            cache["k_s"], ks, (0, ipos, 0))
+        new_cache["v_s"] = jax.lax.dynamic_update_slice(
+            cache["v_s"], vs, (0, ipos, 0))
+        k_cache = _dequant_kv(new_cache["k"], new_cache["k_s"], x.dtype)
+        v_cache = _dequant_kv(new_cache["v"], new_cache["v_s"], x.dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, ipos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, ipos, 0, 0))
+        new_cache["k"], new_cache["v"] = k_cache, v_cache
+    o = decode_attention(q, k_cache, v_cache, pos + 1,
+                         use_pallas=cfg.use_pallas)
+    out = linear_apply(p["wo"], o.reshape(B, 1, cfg.q_dim), cfg)
+    return out, new_cache
+
+
+def cross_attn_init(key, cfg) -> Params:
+    return attn_init(key, cfg)
+
+
+def cross_attn_apply(p: Params, cfg, x: jax.Array, enc_kv: Dict[str, jax.Array]
+                     ) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    B, S, _ = x.shape
+    q = linear_apply(p["wq"], x, cfg).reshape(B, S, cfg.n_heads, cfg.hd)
+    o = flash_attention(q, enc_kv["k"], enc_kv["v"], causal=False,
+                        use_pallas=cfg.use_pallas)
+    return linear_apply(p["wo"], o.reshape(B, S, cfg.q_dim), cfg)
+
+
+def encode_cross_kv(p: Params, cfg, enc_out: jax.Array) -> Dict[str, jax.Array]:
+    B, T, _ = enc_out.shape
+    k = linear_apply(p["wk"], enc_out, cfg).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    v = linear_apply(p["wv"], enc_out, cfg).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    return {"k": k, "v": v}

@@ -1,0 +1,151 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, embeddings, linear
+(with the VTA int8 quantized path as a first-class backend)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vta_gemm import quantized_linear
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------------
+# linear (dense or VTA-quantized)
+# ----------------------------------------------------------------------
+def linear_init(key, d_in: int, d_out: int, dtype) -> Params:
+    scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.uniform(key, (d_in, d_out), jnp.float32, -scale, scale)
+    return {"w": w.astype(dtype)}
+
+
+def linear_apply(p: Params, x: jax.Array, cfg=None) -> jax.Array:
+    """Dense matmul, or the VTA int8 path when the weights were quantized
+    (serve-time PTQ, §5): p == {"w_q": int8, "w_scale": f32}."""
+    if "w_q" in p:
+        return quantized_linear(
+            x, p["w_q"], p["w_scale"],
+            use_pallas=bool(cfg and cfg.use_pallas))
+    return x @ p["w"].astype(x.dtype)
+
+
+def quantize_linear_params(p: Params) -> Params:
+    """Symmetric per-channel PTQ of a dense linear layer (host-side)."""
+    w = jnp.asarray(p["w"], jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)
+    scale = (amax / 127.0).astype(jnp.float32)
+    w_q = jnp.clip(jnp.round(w / scale[None, :]), -128, 127).astype(jnp.int8)
+    return {"w_q": w_q, "w_scale": scale}
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+def norm_init(cfg, d: int) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "nonparametric":   # olmo: LN without affine params
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def norm_apply(cfg, p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        r = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (r * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    r = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        r = r * p["scale"] + p["bias"]
+    return r.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary position embedding
+# ----------------------------------------------------------------------
+def rope_frequencies(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d))
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ----------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------
+def mlp_init(key, cfg, d: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    if cfg.mlp == "swiglu":
+        return {"wi": linear_init(ks[0], d, d_ff, dt),
+                "wg": linear_init(ks[1], d, d_ff, dt),
+                "wo": linear_init(ks[2], d_ff, d, dt)}
+    return {"wi": linear_init(ks[0], d, d_ff, dt),
+            "wo": linear_init(ks[1], d_ff, d, dt)}
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(linear_apply(p["wg"], x, cfg)) * linear_apply(p["wi"], x, cfg)
+    else:
+        h = jax.nn.gelu(linear_apply(p["wi"], x, cfg))
+    return linear_apply(p["wo"], h, cfg)
+
+
+# ----------------------------------------------------------------------
+# embeddings
+# ----------------------------------------------------------------------
+def embed_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    p = {"tokens": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model))
+                    * 0.02).astype(dt)}
+    if cfg.pos == "learned":
+        p["pos"] = (jax.random.normal(jax.random.fold_in(key, 1),
+                                      (cfg.max_seq, cfg.d_model)) * 0.02
+                    ).astype(dt)
+    return p
+
+
+def embed_apply(p: Params, cfg, tokens: jax.Array,
+                positions: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(p["tokens"], tokens, axis=0)
+    if cfg.pos == "learned":
+        pos = (positions if positions is not None
+               else jnp.arange(tokens.shape[-1]))
+        x = x + jnp.take(p["pos"], pos, axis=0)
+    elif cfg.pos == "sinusoidal":
+        pos = (positions if positions is not None
+               else jnp.arange(tokens.shape[-1]))
+        x = x + sinusoidal_embedding(cfg.max_seq, cfg.d_model)[pos].astype(x.dtype)
+    return x

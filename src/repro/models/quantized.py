@@ -1,0 +1,52 @@
+"""Serve-time PTQ of a parameter tree — the paper's §5 deployment step
+(float training checkpoint -> int8 weights) applied to the LM stack.
+
+Every >=2-D linear weight inside layer blocks becomes {w_q: int8,
+w_scale: f32 per-output-channel}; embeddings, norms and the LM head stay
+float (standard practice, and faithful to VTA: the first conv layer also
+stayed on the CPU in the paper's evaluation).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import quantize_linear_params
+
+Params = Any
+
+_QUANT_NAMES = ("wq", "wk", "wv", "wo", "wi", "wg", "up_x", "up_z",
+                "w_in", "w_if", "down", "in_proj", "out_proj")
+
+
+def quantize_params(params: Params) -> Params:
+    """PTQ the layer-stack linears (leading layer dim is vmapped over)."""
+
+    def walk(node, name=""):
+        if isinstance(node, dict) and "w" in node and hasattr(node["w"], "ndim"):
+            if name in _QUANT_NAMES and node["w"].ndim in (2, 3):
+                if node["w"].ndim == 3:      # stacked (L, d_in, d_out)
+                    return jax.vmap(quantize_linear_params)(node)
+                return quantize_linear_params(node)
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        return node
+
+    out = dict(params)
+    out["layers"] = walk(params["layers"])
+    if "shared_attn" in params:
+        out["shared_attn"] = walk(params["shared_attn"])
+    if "encoder" in params:
+        out["encoder"] = walk(params["encoder"])
+    return out
+
+
+def quantized_param_shapes(param_shapes: Params) -> Params:
+    """ShapeDtypeStruct tree of the quantized params (for the dry-run)."""
+    def fake(shape_tree):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shape_tree)
+    return jax.eval_shape(lambda p: quantize_params(p), param_shapes)

@@ -1,0 +1,208 @@
+"""Mamba2 (state-space duality) blocks + shared chunked GLA core.
+
+The SSD recurrence  h_t = a_t h_{t-1} + k_t v_t^T,  y_t = q_t . h_t
+(with per-head scalar decay a_t) covers both Mamba2 (q=C, k=B, v=dt*x,
+a=exp(dt*A)) and mLSTM (q/k/v projections, a=sigmoid forget gate) — one
+chunked implementation serves both (`chunked_gla`).
+
+Chunked algorithm (sub-quadratic, the reason long_500k is runnable for
+SSM/hybrid archs): quadratic attention *within* a chunk of Q tokens,
+associative scan of (decay, state) *across* chunks, O(S*Q + S*N*P/Q).
+
+Decode is O(1)/token: one state update per step (`gla_step`), which is why
+SSM/hybrid decode cells scale to 524k contexts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear_apply, linear_init, norm_apply, norm_init
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------
+# chunked gated linear attention (shared by mamba2 and mLSTM)
+# ----------------------------------------------------------------------
+def chunked_gla(q: jax.Array, k: jax.Array, v: jax.Array,
+                log_a: jax.Array, chunk: int = 128,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """q,k: (B, S, H, N); v: (B, S, H, P); log_a: (B, S, H) (<= 0 decay).
+    Returns y: (B, S, H, P) and final state h: (B, H, N, P).
+
+    y_t = q_t . (sum_{s<=t} exp(L_t - L_s) k_s v_s^T + exp(L_t) h0)
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    qf = q.astype(jnp.float32).reshape(B, nc, Q, H, N)
+    kf = k.astype(jnp.float32).reshape(B, nc, Q, H, N)
+    vf = v.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    la = log_a.astype(jnp.float32).reshape(B, nc, Q, H)
+
+    L = jnp.cumsum(la, axis=2)                      # (B,nc,Q,H) within-chunk
+    Ltot = L[:, :, -1, :]                           # (B,nc,H)
+
+    # ---- intra-chunk (quadratic within Q) ----
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", qf, kf)
+    decay = L[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - L[:, :, None, :, :].transpose(0, 1, 4, 2, 3)   # (B,nc,H,Q,K) = L_t - L_s
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: above-diagonal L_t - L_s > 0 would overflow and
+    # poison gradients through the masked branch
+    w = jnp.exp(jnp.where(causal[None, None, None], decay, -jnp.inf))
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores * w, vf)
+
+    # ---- per-chunk state contribution ----
+    # state_c = sum_s exp(Ltot - L_s) k_s v_s^T
+    ks = kf * jnp.exp(Ltot[:, :, None, :] - L)[..., None]
+    state_c = jnp.einsum("bcqhn,bcqhp->bchnp", ks, vf)   # (B,nc,H,N,P)
+
+    # ---- sequential scan across chunks: h_c = d_c * h_{c-1} + s_c ----
+    # (lax.scan, not associative_scan: the log-tree materializes ~2x the
+    # per-chunk states, which dominates memory for matrix-memory heads)
+    d5 = jnp.exp(Ltot)[..., None, None]                  # (B,nc,H,1,1)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, xs):
+        d_c, s_c = xs                                    # (B,H,1,1),(B,H,N,P)
+        h_next = h * d_c + s_c
+        return h_next, h                                 # emit state *before*
+
+    h_final, h_in = jax.lax.scan(
+        step, h0, (d5.swapaxes(0, 1), state_c.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                           # (B,nc,H,N,P)
+
+    # ---- inter-chunk: y += (q_t exp(L_t)) . h_in ----
+    qd = qf * jnp.exp(L)[..., None]
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", qd, h_in)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_final
+
+
+def gla_step(h: jax.Array, q: jax.Array, k: jax.Array, v: jax.Array,
+             a: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step.  h: (B,H,N,P); q,k: (B,H,N); v: (B,H,P); a: (B,H)."""
+    h = h * a[..., None, None] + jnp.einsum("bhn,bhp->bhnp",
+                                            k.astype(jnp.float32),
+                                            v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), h)
+    return h, y
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------
+def mamba2_init(key, cfg) -> Params:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * N + H     # z, x, B, C, dt
+    conv_ch = di + 2 * N
+    p = {
+        "in_proj": linear_init(ks[0], d, d_in_proj, dt),
+        "out_proj": linear_init(ks[1], di, d, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, conv_ch))
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": norm_init(cfg, di),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (W, C).  Returns
+    (y, new_state) where state is the last W-1 inputs."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+W-1, C)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None] for i in range(W)) + b
+    new_state = xp[:, S:, :] if W > 1 else state
+    return y, new_state
+
+
+def _ssm_inner(cfg, p, zxbcdt: jax.Array, conv_state, ssm_state,
+               chunked: bool):
+    """Shared post-in_proj computation for train/prefill (chunked) and
+    decode (single step)."""
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_head_dim
+    B_, S, _ = zxbcdt.shape
+    z = zxbcdt[..., :di]                       # gate branch
+    xBC = zxbcdt[..., di:2 * di + 2 * N]       # conv channels (x, B, C)
+    dt_raw = zxbcdt[..., 2 * di + 2 * N:]      # per-head dt logits (H)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :di].reshape(B_, S, H, Pd)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    log_a = dt * A[None, None, :]
+    v = x.astype(jnp.float32) * dt[..., None]
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B_, S, H, N))
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B_, S, H, N))
+    if chunked:
+        # chunk ~ state dim N: larger chunks make the intra-chunk
+        # quadratic dominate FLOPs; smaller waste the scan
+        y, ssm_state = chunked_gla(q, k, v, log_a, chunk=max(32, N),
+                                   h0=ssm_state)
+    else:
+        a = jnp.exp(log_a[:, 0])                                      # (B,H)
+        ssm_state, y = gla_step(ssm_state, q[:, 0], k[:, 0], v[:, 0], a)
+        y = y[:, None]
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, di).astype(z.dtype)
+    y = norm_apply(cfg, p["norm"], y * jax.nn.silu(z))
+    return y, conv_state, ssm_state
+
+
+def mamba2_train(p: Params, cfg, x: jax.Array) -> jax.Array:
+    zxbcdt = linear_apply(p["in_proj"], x, cfg)
+    y, _, _ = _ssm_inner(cfg, p, zxbcdt, None, None, chunked=True)
+    return linear_apply(p["out_proj"], y, cfg)
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, N = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, N, cfg.ssm_head_dim),
+                         jnp.float32),
+    }
+
+
+def mamba2_prefill(p: Params, cfg, x: jax.Array, cache: Dict[str, jax.Array]
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    zxbcdt = linear_apply(p["in_proj"], x, cfg)
+    y, conv_state, ssm_state = _ssm_inner(
+        cfg, p, zxbcdt, cache["conv"], cache["ssm"], chunked=True)
+    return (linear_apply(p["out_proj"], y, cfg),
+            {"conv": conv_state, "ssm": ssm_state})
+
+
+def mamba2_decode(p: Params, cfg, x: jax.Array, cache: Dict[str, jax.Array]
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d) — O(1) state update."""
+    zxbcdt = linear_apply(p["in_proj"], x, cfg)
+    y, conv_state, ssm_state = _ssm_inner(
+        cfg, p, zxbcdt, cache["conv"], cache["ssm"], chunked=False)
+    return (linear_apply(p["out_proj"], y, cfg),
+            {"conv": conv_state, "ssm": ssm_state})

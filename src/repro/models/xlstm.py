@@ -1,0 +1,204 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable — lowered onto the
+chunked GLA core with a denominator channel) and sLSTM (scalar memory,
+strictly recurrent — lax.scan over time).
+
+mLSTM recurrence (per head):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T          (matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t                (normalizer)
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+Implemented by appending a constant-1 channel to v so that the GLA state
+carries (C | n) jointly — one scan, exact semantics.
+
+The 7:1 mLSTM:sLSTM interleave of xlstm-1.3b is expressed through
+ModelConfig.block_pattern (slstm_every=8).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear_apply, linear_init, norm_apply, norm_init
+from .ssm import chunked_gla, gla_step
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------
+# mLSTM block
+# ----------------------------------------------------------------------
+def _qk_dim(cfg) -> int:
+    """mLSTM uses a narrower q/k dim than the value dim (official xLSTM
+    does the same): the matrix memory is (N_qk x P_v) per head — with
+    N_qk == P_v == 1024 the per-chunk states alone would be hundreds of
+    GiB at trillion-token batch sizes."""
+    dh_v = (2 * cfg.d_model) // cfg.n_heads
+    return max(64, dh_v // 4)
+
+
+def mlstm_init(key, cfg) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    nqk = _qk_dim(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_x": linear_init(ks[0], d, 2 * d, dt),
+        "up_z": linear_init(ks[1], d, 2 * d, dt),
+        "wq": linear_init(ks[2], 2 * d, H * nqk, dt),
+        "wk": linear_init(ks[3], 2 * d, H * nqk, dt),
+        "wv": linear_init(ks[4], 2 * d, 2 * d, dt),
+        "w_if": linear_init(ks[5], 2 * d, 2 * H, dt),   # input+forget gates
+        "down": linear_init(ks[6], 2 * d, d, dt),
+        "norm": norm_init(cfg, 2 * d),
+    }
+
+
+def _mlstm_qkvg(p: Params, cfg, xu: jax.Array):
+    B, S, d2 = xu.shape
+    H = cfg.n_heads
+    dh = d2 // H
+    nqk = _qk_dim(cfg)
+    q = linear_apply(p["wq"], xu, cfg).reshape(B, S, H, nqk)
+    k = linear_apply(p["wk"], xu, cfg).reshape(B, S, H, nqk) / math.sqrt(nqk)
+    v = linear_apply(p["wv"], xu, cfg).reshape(B, S, H, dh)
+    gates = linear_apply(p["w_if"], xu, cfg).astype(jnp.float32)
+    i_gate = jnp.exp(-jax.nn.softplus(-gates[..., :H]))       # sigmoid, (B,S,H)
+    log_f = -jax.nn.softplus(-gates[..., H:])                 # log sigmoid
+    return q, k, v, i_gate, log_f
+
+
+def _mlstm_out(p: Params, cfg, y: jax.Array, den: jax.Array, z: jax.Array,
+               B: int, S: int) -> jax.Array:
+    H = cfg.n_heads
+    y = y / jnp.maximum(jnp.abs(den), 1.0)                    # normalizer
+    y = y.reshape(B, S, 2 * cfg.d_model).astype(z.dtype)
+    y = norm_apply(cfg, p["norm"], y) * jax.nn.silu(z)
+    return linear_apply(p["down"], y, cfg)
+
+
+def mlstm_train(p: Params, cfg, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    xu = linear_apply(p["up_x"], x, cfg)
+    z = linear_apply(p["up_z"], x, cfg)
+    q, k, v, i_gate, log_f = _mlstm_qkvg(p, cfg, xu)
+    # denominator channel: v' = [i*v | i*1]
+    vi = jnp.concatenate([v * i_gate[..., None],
+                          i_gate[..., None].astype(v.dtype)], axis=-1)
+    y_all, _ = chunked_gla(q, k, vi, log_f, chunk=512)
+    y, den = y_all[..., :-1], y_all[..., -1:]
+    return _mlstm_out(p, cfg, y, den, z, B, S)
+
+
+def init_mlstm_cache(cfg, batch: int) -> Dict[str, jax.Array]:
+    H = cfg.n_heads
+    dh = (2 * cfg.d_model) // H
+    return {"h": jnp.zeros((batch, H, _qk_dim(cfg), dh + 1), jnp.float32)}
+
+
+def mlstm_prefill(p: Params, cfg, x: jax.Array, cache) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape
+    xu = linear_apply(p["up_x"], x, cfg)
+    z = linear_apply(p["up_z"], x, cfg)
+    q, k, v, i_gate, log_f = _mlstm_qkvg(p, cfg, xu)
+    vi = jnp.concatenate([v * i_gate[..., None],
+                          i_gate[..., None].astype(v.dtype)], axis=-1)
+    y_all, h = chunked_gla(q, k, vi, log_f, chunk=512, h0=cache["h"])
+    y, den = y_all[..., :-1], y_all[..., -1:]
+    return _mlstm_out(p, cfg, y, den, z, B, S), {"h": h}
+
+
+def mlstm_decode(p: Params, cfg, x: jax.Array, cache) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape           # S == 1
+    xu = linear_apply(p["up_x"], x, cfg)
+    z = linear_apply(p["up_z"], x, cfg)
+    q, k, v, i_gate, log_f = _mlstm_qkvg(p, cfg, xu)
+    vi = jnp.concatenate([v * i_gate[..., None],
+                          i_gate[..., None].astype(v.dtype)], axis=-1)
+    h, y_all = gla_step(cache["h"], q[:, 0], k[:, 0], vi[:, 0],
+                        jnp.exp(log_f[:, 0]))
+    y, den = y_all[None, :, :, :-1].swapaxes(0, 1), y_all[None, :, :, -1:].swapaxes(0, 1)
+    return _mlstm_out(p, cfg, y, den, z, B, 1), {"h": h}
+
+
+# ----------------------------------------------------------------------
+# sLSTM block (strictly recurrent)
+# ----------------------------------------------------------------------
+def slstm_init(key, cfg) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": linear_init(ks[0], d, 4 * d, dt),      # z, i, f, o pre-acts
+        "r": (jax.random.normal(ks[1], (H, d // H, 4 * (d // H)))
+              * (0.5 / math.sqrt(d // H))).astype(jnp.float32),
+        "down": linear_init(ks[2], d, d, dt),
+        "norm": norm_init(cfg, d),
+    }
+
+
+def init_slstm_cache(cfg, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}
+
+
+def _slstm_cell(cfg, r, pre, state):
+    """pre: (B, 4d) input preactivations; recurrent contribution from h."""
+    B = pre.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    c, n, h = state["c"], state["n"], state["h"]
+    hr = jnp.einsum("bhx,hxy->bhy", h.reshape(B, H, dh), r).reshape(B, 4 * d)
+    z, i, f, o = jnp.split(pre.astype(jnp.float32) + hr, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jnp.exp(jnp.minimum(i, 10.0))        # exponential input gate (capped)
+    f = jnp.exp(-jax.nn.softplus(-f))        # sigmoid forget
+    o = jnp.exp(-jax.nn.softplus(-o))
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h}
+
+
+def slstm_train(p: Params, cfg, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    pre = linear_apply(p["w_in"], x, cfg)                  # (B, S, 4d)
+    state = init_slstm_cache(cfg, B)
+
+    def step(carry, pre_t):
+        st = _slstm_cell(cfg, p["r"], pre_t, carry)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, state, pre.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                  # (B, S, d)
+    y = norm_apply(cfg, p["norm"], y)
+    return linear_apply(p["down"], y, cfg)
+
+
+def slstm_prefill(p: Params, cfg, x: jax.Array, cache) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape
+    pre = linear_apply(p["w_in"], x, cfg)
+
+    def step(carry, pre_t):
+        st = _slstm_cell(cfg, p["r"], pre_t, carry)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, cache, pre.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    y = norm_apply(cfg, p["norm"], y)
+    return linear_apply(p["down"], y, cfg), state
+
+
+def slstm_decode(p: Params, cfg, x: jax.Array, cache) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    pre = linear_apply(p["w_in"], x, cfg)[:, 0]
+    state = _slstm_cell(cfg, p["r"], pre, cache)
+    y = state["h"][:, None].astype(x.dtype)
+    y = norm_apply(cfg, p["norm"], y)
+    return linear_apply(p["down"], y, cfg), state

@@ -1,0 +1,3 @@
+from .optimizers import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, make_optimizer)
+from .schedules import cosine_schedule, linear_warmup

@@ -1,0 +1,134 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+AdamW for everything that fits; Adafactor (factored second moment, no
+first moment) for the 1T-param kimi-k2 config, where AdamW fp32 states
+(~12 TB) exceed the 512-chip pod's 8 TB HBM.  Optimizer state mirrors the
+parameter pytree, so the same PartitionSpecs shard it (ZeRO-style when
+FSDP is on).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ----------------------------------------------------------------------
+# grad clipping
+# ----------------------------------------------------------------------
+def global_norm(tree: Params) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ----------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------
+def adamw_init(params: Params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads: Params, state: Dict[str, Any], params: Params, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1
+                 ) -> Tuple[Params, Dict[str, Any]]:
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    m = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_p = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": m, "v": v, "count": count}
+
+
+# ----------------------------------------------------------------------
+# Adafactor (factored second moment; memory ~ O(rows + cols))
+# ----------------------------------------------------------------------
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Params) -> Dict[str, Any]:
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(init, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads: Params, state: Dict[str, Any], params: Params, *,
+                     lr: jax.Array, decay: float = 0.99, eps: float = 1e-30,
+                     clip_threshold: float = 1.0, weight_decay: float = 0.0
+                     ) -> Tuple[Params, Dict[str, Any]]:
+    count = state["count"] + 1
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(g.shape):
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                     ) * vc[..., None, :]
+            update = g * jax.lax.rsqrt(denom + eps)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            nv = decay * v["v"] + (1 - decay) * g2
+            update = g * jax.lax.rsqrt(nv + eps)
+            new_v = {"v": nv}
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + eps)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return new_v, (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state["v"], params,
+                        is_leaf=lambda x: isinstance(x, dict)
+                        and set(x) <= {"vr", "vc", "v"})
+    new_v = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_p = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"v": new_v, "count": count}
+
+
+# ----------------------------------------------------------------------
+# factory
+# ----------------------------------------------------------------------
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

@@ -1,0 +1,81 @@
+"""conv2d lowering vs numpy oracle + ResNet layer configs."""
+import numpy as np
+import pytest
+
+from repro.core import hwspec
+from repro.core.conv import (ConvShape, conv2d_reference, read_conv_result,
+                             schedule_conv2d)
+from repro.core.runtime import Runtime
+from repro.core.scheduler import Epilogue
+from repro.core.simulator import TimingModel
+from repro.core.workloads import layer_by_name
+
+
+def _run_conv(shape: ConvShape, vt=2, epilogue=None, seed=0):
+    spec = hwspec.pynq()
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=(shape.n, shape.ic, shape.h, shape.w),
+                     dtype=np.int8)
+    w = rng.integers(-128, 128, size=(shape.oc, shape.ic, shape.kh, shape.kw),
+                     dtype=np.int8)
+    rt = Runtime(spec)
+    plan = schedule_conv2d(rt, x, w, shape, epilogue=epilogue,
+                           virtual_threads=vt)
+    rt.synchronize()
+    got = read_conv_result(rt, plan)
+    want = conv2d_reference(x, w, shape, epilogue=epilogue)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("vt", [1, 2])
+def test_conv_3x3(vt):
+    _run_conv(ConvShape(n=1, h=14, w=14, ic=32, oc=32, kh=3, kw=3,
+                        stride=1, pad=1), vt=vt)
+
+
+def test_conv_1x1_stride2():
+    _run_conv(ConvShape(n=1, h=14, w=14, ic=32, oc=64, kh=1, kw=1,
+                        stride=2, pad=0))
+
+
+def test_conv_3x3_stride2_with_epilogue():
+    spec = hwspec.pynq()
+    oc = 32
+    rng = np.random.default_rng(3)
+    bias = rng.integers(-500, 500, size=oc, dtype=np.int32)
+    ocb = oc // spec.block_out
+    bias_blocked = np.repeat(bias.reshape(ocb, 1, spec.block_out),
+                             spec.batch, axis=1)
+    ep = Epilogue(bias_blocked=bias_blocked, shift=5, relu=True)
+    _run_conv(ConvShape(n=1, h=14, w=14, ic=32, oc=oc, kh=3, kw=3,
+                        stride=2, pad=1), epilogue=ep)
+
+
+def test_conv_edge_tiles_nondivisible():
+    # OH=7 with small SRAM tiles exercises oht_c < oht edge handling
+    _run_conv(ConvShape(n=1, h=7, w=7, ic=64, oc=64, kh=3, kw=3,
+                        stride=1, pad=1))
+
+
+def test_resnet_c9_exact_and_hiding():
+    layer = layer_by_name("C9")
+    s = layer.shape
+    small = ConvShape(n=1, h=s.h, w=s.w, ic=s.ic, oc=s.oc, kh=s.kh,
+                      kw=s.kw, stride=s.stride, pad=s.pad)
+    _run_conv(small, vt=2)
+
+
+def test_conv_virtual_threading_hides_latency():
+    spec = hwspec.pynq()
+    shape = ConvShape(n=1, h=28, w=28, ic=128, oc=128, kh=3, kw=3,
+                      stride=1, pad=1)
+    rng = np.random.default_rng(0)
+    x = rng.integers(-16, 16, size=(1, shape.ic, shape.h, shape.w), dtype=np.int8)
+    w = rng.integers(-16, 16, size=(shape.oc, shape.ic, 3, 3), dtype=np.int8)
+    util = {}
+    for vt in (1, 2):
+        rt = Runtime(spec)
+        schedule_conv2d(rt, x, w, shape, virtual_threads=vt)
+        stats = rt.synchronize(timing=TimingModel(spec))
+        util[vt] = stats.compute_utilization
+    assert util[2] > util[1]

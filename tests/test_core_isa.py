@@ -1,0 +1,115 @@
+"""ISA encode/decode roundtrips + co-design fluidity (spec-derived widths)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hwspec
+from repro.core.isa import (AluInsn, AluOp, DepFlags, FinishInsn, GemmInsn,
+                            IsaLayout, LoadStoreInsn, MemId, Opcode,
+                            route_queue, COMPUTE_Q, LOAD_Q, STORE_Q)
+from repro.core.microop import UOp, UopLayout
+
+SPECS = [hwspec.pynq(), hwspec.pynq_batch2(), hwspec.tpu_like()]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=["pynq", "pynq_b2", "tpu_like"])
+def test_loadstore_roundtrip(spec):
+    isa = IsaLayout(spec)
+    insn = LoadStoreInsn(
+        opcode=Opcode.LOAD, dep=DepFlags(True, False, True, False),
+        memory_type=MemId.INP, sram_base=17, dram_base=123456,
+        y_size=14, x_size=28, x_stride=56, y_pad_0=1, y_pad_1=2,
+        x_pad_0=3, x_pad_1=3)
+    words = isa.encode(insn)
+    got = isa.decode(*words)
+    assert got == insn
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=["pynq", "pynq_b2", "tpu_like"])
+def test_gemm_alu_finish_roundtrip(spec):
+    isa = IsaLayout(spec)
+    g = GemmInsn(dep=DepFlags(False, True, False, True), reset=False,
+                 uop_bgn=5, uop_end=77, iter_out=14, iter_in=8,
+                 dst_factor_out=56, dst_factor_in=1, src_factor_out=2,
+                 src_factor_in=0, wgt_factor_out=0, wgt_factor_in=9)
+    assert isa.decode(*isa.encode(g)) == g
+    a = AluInsn(dep=DepFlags(), reset=False, uop_bgn=0, uop_end=1,
+                iter_out=4, iter_in=16, dst_factor_out=16, dst_factor_in=1,
+                src_factor_out=16, src_factor_in=1, alu_opcode=AluOp.SHR,
+                use_imm=True, imm=-7)
+    got = isa.decode(*isa.encode(a))
+    assert got == a
+    assert got.imm == -7  # sign-extended immediate
+    f = FinishInsn(dep=DepFlags(True, True, False, False))
+    assert isa.decode(*isa.encode(f)) == f
+
+
+@given(dst=st.integers(0, 2047), src=st.integers(0, 2047),
+       wgt=st.integers(0, 1023))
+@settings(max_examples=200, deadline=None)
+def test_uop_roundtrip_hypothesis(dst, src, wgt):
+    lay = UopLayout(hwspec.pynq())
+    u = UOp(dst, src, wgt)
+    assert lay.decode(lay.encode(u)) == u
+
+
+@given(y=st.integers(0, 1000), x=st.integers(0, 1000),
+       stride=st.integers(0, 60000), base=st.integers(0, 2**31),
+       pads=st.tuples(*[st.integers(0, 15)] * 4))
+@settings(max_examples=200, deadline=None)
+def test_loadstore_roundtrip_hypothesis(y, x, stride, base, pads):
+    isa = IsaLayout(hwspec.pynq())
+    insn = LoadStoreInsn(
+        opcode=Opcode.STORE, dep=DepFlags(), memory_type=MemId.OUT,
+        sram_base=0, dram_base=base, y_size=y, x_size=x, x_stride=stride,
+        y_pad_0=pads[0], y_pad_1=pads[1], x_pad_0=pads[2], x_pad_1=pads[3])
+    assert isa.decode(*isa.encode(insn)) == insn
+
+
+def test_field_overflow_raises():
+    isa = IsaLayout(hwspec.pynq())
+    bad = LoadStoreInsn(opcode=Opcode.LOAD, dep=DepFlags(),
+                        memory_type=MemId.INP, sram_base=1 << 20,
+                        dram_base=0, y_size=1, x_size=1, x_stride=1)
+    with pytest.raises(ValueError):
+        isa.encode(bad)
+
+
+def test_fetch_routing_rules():
+    """§2.4: UOP/ACC loads -> compute queue; INP/WGT -> load queue."""
+    def mk(mem, op=Opcode.LOAD):
+        return LoadStoreInsn(opcode=op, dep=DepFlags(), memory_type=mem,
+                             sram_base=0, dram_base=0, y_size=1, x_size=1,
+                             x_stride=1)
+    assert route_queue(mk(MemId.INP)) == LOAD_Q
+    assert route_queue(mk(MemId.WGT)) == LOAD_Q
+    assert route_queue(mk(MemId.UOP)) == COMPUTE_Q
+    assert route_queue(mk(MemId.ACC)) == COMPUTE_Q
+    assert route_queue(mk(MemId.OUT, Opcode.STORE)) == STORE_Q
+
+
+def test_isa_adapts_to_spec():
+    """Co-design fluidity: changing buffer sizes changes the encoding."""
+    a = IsaLayout(hwspec.pynq())
+    big = hwspec.pynq().replace(acc_buff_bytes=512 * 1024, uop_bits=64)
+    b = IsaLayout(big)
+    assert b.factor_bits > a.factor_bits
+    la = UopLayout(hwspec.pynq())
+    lb = UopLayout(big)
+    assert lb.dst_bits > la.dst_bits
+
+
+def test_large_template_widens_instruction_word():
+    """tpu_like template needs 256-bit instructions; pynq fits in 128."""
+    assert IsaLayout(hwspec.pynq()).insn_bits == 128
+    assert IsaLayout(hwspec.tpu_like()).insn_bits == 256
+
+
+def test_uop_width_guard():
+    """A template instance whose indices don't fit 32-bit uops must be
+    rejected at layout-derivation time."""
+    huge = hwspec.pynq().replace(inp_buff_bytes=1 << 26,
+                                 acc_buff_bytes=1 << 26,
+                                 wgt_buff_bytes=1 << 26)
+    with pytest.raises(ValueError):
+        UopLayout(huge)

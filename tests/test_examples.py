@@ -1,0 +1,39 @@
+"""The shipped examples must run end-to-end (subprocess, defaults)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, *args, timeout=600):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", script), *args],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "exact int8 result ok" in out
+    assert "virtual_threads=2" in out
+
+
+def test_resnet18_offload():
+    out = _run("resnet18_offload.py", "C12")
+    assert "exact on VTA" in out
+
+
+def test_train_lm_short():
+    out = _run("train_lm.py", "--arch", "olmo-1b", "--steps", "40")
+    assert "LEARNING" in out
+
+
+def test_serve_lm():
+    out = _run("serve_lm.py", "--arch", "llama3.2-3b", "--requests", "2",
+               "--max-new", "6")
+    assert "agreement" in out

@@ -1,0 +1,73 @@
+"""HLO analyzer unit tests on synthetic HLO text (no compilation)."""
+import textwrap
+
+from repro.launch.hlo_analysis import HloStats, analyze, parse_hlo
+
+HLO = textwrap.dedent("""
+    HloModule test, is_scheduled=true
+
+    %fused_computation (param_0: f32[10,64,64], param_1: s32[]) -> f32[64,64] {
+      %param_0 = f32[10,64,64]{2,1,0} parameter(0)
+      %param_1 = s32[] parameter(1)
+      %constant.0 = s32[] constant(0)
+      %dynamic_slice.0 = f32[1,64,64]{2,1,0} dynamic-slice(%param_0, %param_1, %constant.0, %constant.0), dynamic_slice_sizes={1,64,64}
+      ROOT %bitcast.1 = f32[64,64]{1,0} bitcast(%dynamic_slice.0)
+    }
+
+    %body (arg: (s32[], f32[64,64], f32[10,64,64])) -> (s32[], f32[64,64], f32[10,64,64]) {
+      %arg = (s32[], f32[64,64]{1,0}, f32[10,64,64]{2,1,0}) parameter(0)
+      %constant.1 = s32[] constant(1)
+      %gte.0 = s32[] get-tuple-element(%arg), index=0
+      %gte.1 = f32[64,64]{1,0} get-tuple-element(%arg), index=1
+      %gte.2 = f32[10,64,64]{2,1,0} get-tuple-element(%arg), index=2
+      %w = f32[64,64]{1,0} fusion(%gte.2, %gte.0), kind=kLoop, calls=%fused_computation
+      %dot.0 = f32[64,64]{1,0} dot(%gte.1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[64,64]{1,0} all-reduce(%dot.0), channel_id=1, replica_groups=[4,8]<=[32], to_apply=%add
+      %next = s32[] add(%gte.0, %constant.1)
+      ROOT %tuple.0 = (s32[], f32[64,64]{1,0}, f32[10,64,64]{2,1,0}) tuple(%next, %ar, %gte.2)
+    }
+
+    %cond (arg2: (s32[], f32[64,64], f32[10,64,64])) -> pred[] {
+      %arg2 = (s32[], /*index=1*/f32[64,64]{1,0}, f32[10,64,64]{2,1,0}) parameter(0)
+      %c10 = s32[] constant(10)
+      %g0 = s32[] get-tuple-element(%arg2), index=0
+      ROOT %lt = pred[] compare(%g0, %c10), direction=LT
+    }
+
+    ENTRY %main (x: f32[64,64], ws: f32[10,64,64]) -> f32[64,64] {
+      %x = f32[64,64]{1,0} parameter(0)
+      %ws = f32[10,64,64]{2,1,0} parameter(1)
+      %c0 = s32[] constant(0)
+      %t = (s32[], f32[64,64]{1,0}, f32[10,64,64]{2,1,0}) tuple(%c0, %x, %ws)
+      %wh = (s32[], /*index=1*/f32[64,64]{1,0}, f32[10,64,64]{2,1,0}) while(%t), condition=%cond, body=%body
+      ROOT %out = f32[64,64]{1,0} get-tuple-element(%wh), index=1
+    }
+""")
+
+
+def test_parse_computations_with_tuple_comments():
+    comps, entry = parse_hlo(HLO)
+    assert entry == "main"
+    assert {"fused_computation", "body", "cond", "main"} <= set(comps)
+    # tuple-typed while op with /*index=N*/ comments must parse
+    ops = {o.opcode for o in comps["main"].ops}
+    assert "while" in ops
+
+
+def test_trip_count_multiplies_dots_and_collectives():
+    st = analyze(HLO, total_devices=32)
+    assert st.while_trip_counts == [10]
+    assert st.dot_flops == 10 * 2 * 64 * 64 * 64
+    # all-reduce inside the loop: group size 8 (from [4,8]<=[32])
+    rb = 64 * 64 * 4
+    expected = 10 * 2 * rb * (8 - 1) / 8
+    assert abs(st.collective_bytes["all-reduce"] - expected) < 1e-6
+    assert st.collective_counts["all-reduce"] == 10
+
+
+def test_scan_slice_memory_not_overcounted():
+    st = analyze(HLO, total_devices=32)
+    # the fusion reads one (64,64) slice per trip, not the whole (10,64,64)
+    # stack; memory must therefore be well below 10 trips x full stack
+    full_stack = 10 * 64 * 64 * 4
+    assert st.memory_bytes < 10 * (full_stack + 3 * 64 * 64 * 4)

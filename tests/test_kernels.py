@@ -1,0 +1,236 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes/dtypes/epilogues, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_pallas,
+                                            decode_attention_ref)
+from repro.kernels.flash_attention import (attention_ref, flash_attention,
+                                           flash_attention_pallas)
+from repro.kernels.tensor_alu import requantize, tensor_alu, tensor_alu_ref
+from repro.kernels.vta_gemm import (quantized_linear, vta_gemm,
+                                    vta_gemm_pallas, vta_gemm_ref)
+
+
+# ----------------------------------------------------------------------
+# vta_gemm
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 128, 384),
+                                   (128, 256, 128)])
+@pytest.mark.parametrize("epilogue", ["none", "requant", "dequant"])
+def test_vta_gemm_matches_ref(shape, epilogue):
+    M, N, K = shape
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
+    bias = jnp.asarray(rng.integers(-1000, 1000, (N,)), jnp.int32)
+    scale = jnp.asarray(rng.uniform(0.001, 0.01, (N,)), jnp.float32)
+    kw = dict(epilogue=epilogue, shift=7)
+    if epilogue != "dequant":
+        scale_arg = None
+    else:
+        scale_arg = scale
+    got = vta_gemm(a, w, bias, scale_arg, use_pallas=True, interpret=True, **kw)
+    want = vta_gemm_ref(a, w, bias, scale_arg, **kw)
+    if epilogue == "dequant":
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+def test_vta_gemm_nonaligned_padding():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(-128, 128, (100, 200)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (200, 72)), jnp.int8)
+    got = vta_gemm(a, w, use_pallas=True, interpret=True)
+    want = vta_gemm_ref(a, w)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vta_gemm_block_shape_sweep():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-128, 128, (256, 256)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (256, 256)), jnp.int8)
+    want = vta_gemm_ref(a, w)
+    for bm, bn, bk in [(128, 128, 128), (256, 128, 128), (128, 256, 256)]:
+        got = vta_gemm(a, w, use_pallas=True, interpret=True,
+                       bm=bm, bn=bn, bk=bk)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_quantized_linear_close_to_float():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(32, 256)), jnp.float32)
+    w = rng.normal(size=(256, 128)).astype(np.float32) / 16
+    w_amax = np.abs(w).max(axis=0)
+    w_scale = jnp.asarray(w_amax / 127.0, jnp.float32)
+    w_q = jnp.asarray(np.round(w / (w_amax / 127.0)), jnp.int8)
+    y = quantized_linear(x, w_q, w_scale, use_pallas=True, interpret=True)
+    y_ref = x @ jnp.asarray(w)
+    corr = np.corrcoef(np.asarray(y).ravel(), np.asarray(y_ref).ravel())[0, 1]
+    assert corr > 0.999
+
+
+# ----------------------------------------------------------------------
+# tensor_alu
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("chain", [
+    (("add", 5),), (("min", 100), ("max", -100)),
+    (("shr", 4),), (("shr", -2),), (("mul", 3), ("add", None)),
+])
+def test_tensor_alu_matches_ref(chain):
+    rng = np.random.default_rng(4)
+    d = jnp.asarray(rng.integers(-2**20, 2**20, (256, 256)), jnp.int32)
+    s = jnp.asarray(rng.integers(-2**10, 2**10, (256, 256)), jnp.int32)
+    got = tensor_alu(d, s, chain=chain, use_pallas=True, interpret=True)
+    want = tensor_alu_ref(d, s, chain=chain)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(shift=st.integers(0, 16), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_requantize_property(shift, seed):
+    """requantize == truncating shift then clip, for any shift."""
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(rng.integers(-2**24, 2**24, (8, 128)), jnp.int32)
+    got = np.asarray(requantize(acc, shift, use_pallas=True, interpret=True))
+    want = np.clip(np.asarray(acc) >> shift, -128, 127)
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------------------
+# flash attention (prefill)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cfg", [
+    # (B, S, HQ, KH, D)
+    (1, 512, 4, 4, 64),     # MHA
+    (2, 512, 8, 2, 64),     # GQA 4:1
+    (1, 1024, 4, 1, 128),   # MQA
+])
+def test_flash_attention_matches_ref(cfg, dtype):
+    B, S, HQ, KH, D = cfg
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(B, S, HQ, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), dtype)
+    got = flash_attention(q, k, v, causal=True, use_pallas=True,
+                          interpret=True, bq=256, bk=256)
+    want = flash_attention(q, k, v, causal=True, use_pallas=False)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, use_pallas=True,
+                          interpret=True, bq=128, bk=128)
+    want = flash_attention(q, k, v, causal=False, use_pallas=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_block_sweep():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 1, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 512, 1, 64)), jnp.float32)
+    want = flash_attention(q, k, v, use_pallas=False)
+    for bq, bk in [(64, 128), (128, 64), (256, 512), (512, 256)]:
+        got = flash_attention(q, k, v, use_pallas=True, interpret=True,
+                              bq=bq, bk=bk)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5,
+                                   err_msg=f"bq={bq} bk={bk}")
+
+
+# ----------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [
+    # (B, S, HQ, KH, D, kv_len)
+    (2, 1024, 8, 2, 64, 1024),
+    (1, 2048, 4, 4, 128, 1536),   # partial cache (padded tail)
+    (4, 512, 8, 1, 64, 100),      # MQA, short cache
+])
+def test_decode_attention_matches_ref(cfg):
+    B, S, HQ, KH, D, kv_len = cfg
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(B, 1, HQ, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    got = decode_attention(q, k, v, jnp.int32(kv_len), use_pallas=True,
+                           interpret=True, bk=256)
+    want = decode_attention(q, k, v, jnp.int32(kv_len), use_pallas=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_matches_prefill_last_token():
+    """Decode over a cache == last row of full causal prefill."""
+    rng = np.random.default_rng(9)
+    B, S, HQ, KH, D = 1, 256, 4, 2, 64
+    q_full = jnp.asarray(rng.normal(size=(B, S, HQ, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    full = flash_attention(q_full, k, v, causal=True, use_pallas=False)
+    dec = decode_attention(q_full[:, -1:], k, v, jnp.int32(S),
+                           use_pallas=True, interpret=True, bk=64)
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# gla_chunk (Mamba2 / mLSTM chunk scan)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [
+    # (B, S, H, N, P, chunk)
+    (2, 256, 3, 32, 32, 64),
+    (1, 512, 2, 64, 64, 128),
+    (2, 128, 4, 16, 48, 32),   # N != P (mLSTM-style)
+])
+def test_gla_chunk_kernel_matches_ref(cfg):
+    from repro.kernels.gla_chunk import gla_chunk
+    B, S, H, N, P, chunk = cfg
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    la = jnp.asarray(-np.abs(rng.normal(size=(B, S, H))) * 0.3, jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, H, N, P)) * 0.1, jnp.float32)
+    y_p, h_p = gla_chunk(q, k, v, la, h0, chunk=chunk, use_pallas=True,
+                         interpret=True)
+    y_r, h_r = gla_chunk(q, k, v, la, h0, chunk=chunk, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_r),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_gla_chunk_kernel_vs_recurrence():
+    """Kernel against the raw step-by-step recurrence (independent of the
+    model-layer oracle)."""
+    from repro.kernels.gla_chunk import gla_chunk
+    from repro.models.ssm import gla_step
+    rng = np.random.default_rng(12)
+    B, S, H, N, P = 1, 64, 2, 8, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    la = jnp.asarray(-np.abs(rng.normal(size=(B, S, H))) * 0.2, jnp.float32)
+    h = jnp.zeros((B, H, N, P), jnp.float32)
+    ys = []
+    for t in range(S):
+        h, yt = gla_step(h, q[:, t], k[:, t], v[:, t], jnp.exp(la[:, t]))
+        ys.append(yt)
+    y_ref = jnp.stack(ys, axis=1)
+    y_p, h_p = gla_chunk(q, k, v, la, None, chunk=16, use_pallas=True,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_ref),
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(h_p), np.asarray(h), atol=3e-4,
+                               rtol=3e-4)

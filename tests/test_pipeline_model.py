@@ -1,0 +1,101 @@
+"""Cycle-level pipeline model: latency hiding, roofline placement, and
+runtime uop-cache behavior."""
+import numpy as np
+import pytest
+
+from repro.core import hwspec
+from repro.core.conv import ConvShape
+from repro.core.pipeline_model import (conv_roofline_point,
+                                       hardware_roofline,
+                                       matmul_roofline_point)
+from repro.core.runtime import Runtime, UopBuilder
+from repro.core.scheduler import schedule_matmul
+from repro.core.simulator import TimingModel
+
+
+def test_roofline_bounds_achieved_gops():
+    """No configuration may exceed the roofline."""
+    spec = hwspec.pynq()
+    for vt in (1, 2):
+        p = matmul_roofline_point(spec, 256, 256, 256, "mm", vt)
+        assert p.gops <= p.roofline_gops * 1.001
+        assert 0.0 <= p.utilization <= 1.0
+
+
+def test_latency_hiding_improves_bandwidth_bound_layer():
+    """A low-intensity (bandwidth-ish) conv benefits from virtual threads."""
+    spec = hwspec.pynq()
+    shape = ConvShape(n=1, h=28, w=28, ic=64, oc=64, kh=1, kw=1,
+                      stride=1, pad=0)
+    p1 = conv_roofline_point(spec, shape, "c", 1)
+    p2 = conv_roofline_point(spec, shape, "c", 2)
+    assert p2.total_cycles < p1.total_cycles
+    assert p2.utilization > p1.utilization
+
+
+def test_bandwidth_scaling_shifts_roofline():
+    """Double DRAM bandwidth must not hurt, and helps bandwidth-bound
+    workloads more than compute-bound ones."""
+    slow = hwspec.pynq().replace(dram_rd_bytes_per_cycle=4.0,
+                                 dram_wr_bytes_per_cycle=4.0)
+    fast = hwspec.pynq().replace(dram_rd_bytes_per_cycle=16.0,
+                                 dram_wr_bytes_per_cycle=16.0)
+    shape = ConvShape(n=1, h=28, w=28, ic=64, oc=64, kh=1, kw=1,
+                      stride=1, pad=0)   # low intensity
+    c_slow = conv_roofline_point(slow, shape, "c", 2).total_cycles
+    c_fast = conv_roofline_point(fast, shape, "c", 2).total_cycles
+    assert c_fast < c_slow
+
+
+def test_gemm_latency_model_counts_uops():
+    spec = hwspec.pynq()
+    rt = Runtime(spec)
+
+    def build(b: UopBuilder):
+        b.loop_begin(4, 1, 1)
+        b.loop_begin(8, 4, 0)
+        for kk in range(3):
+            b.push(0, kk, kk)
+        b.loop_end(); b.loop_end()
+
+    kern = rt.uop_kernel(build, key="t")
+    insn_idx = rt.push_gemm(kern)
+    insn = rt.stream[insn_idx]
+    tm = TimingModel(spec)
+    assert tm.latency(insn, spec) == 4 * 8 * 3  # one matmul per cycle
+
+
+def test_uop_cache_lru_reload():
+    """Evicted kernels must be re-loaded into uop SRAM on reuse."""
+    spec = hwspec.pynq().replace(uop_buff_bytes=64)  # 16 uops only
+    rt = Runtime(spec)
+
+    def mk(tag, n):
+        def build(b: UopBuilder):
+            b.loop_begin(1, 0, 0)
+            for i in range(n):
+                b.push(i, 0, 0)
+            b.loop_end()
+        return rt.uop_kernel(build, key=tag)
+
+    k1, k2 = mk("k1", 10), mk("k2", 10)
+    rt.push_gemm(k1)            # load k1
+    rt.push_gemm(k2)            # wraps: evicts k1, loads k2
+    rt.push_gemm(k1)            # must re-load k1
+    uop_loads = [i for i in rt.stream
+                 if getattr(i, "memory_type", None) is not None
+                 and i.memory_type.name == "UOP"]
+    assert len(uop_loads) == 3
+
+
+def test_stats_dram_accounting():
+    spec = hwspec.pynq()
+    rng = np.random.default_rng(0)
+    a = rng.integers(-8, 8, size=(64, 64), dtype=np.int8)
+    w = rng.integers(-8, 8, size=(64, 64), dtype=np.int8)
+    rt = Runtime(spec)
+    schedule_matmul(rt, a, w, virtual_threads=1)
+    stats = rt.synchronize(timing=TimingModel(spec))
+    assert stats.gemm_macs == 64 ** 3
+    assert stats.dram_rd_bytes >= 2 * 64 * 64   # at least one pass each
+    assert stats.dram_wr_bytes >= 64 * 64

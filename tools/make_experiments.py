@@ -1,0 +1,75 @@
+"""Generate the §Dry-run / §Roofline sections of EXPERIMENTS.md from
+experiments/dryrun/*.json.  Run after `python -m repro.launch.dryrun --all`.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(dirname="experiments/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        d = json.load(open(f))
+        d["_file"] = os.path.basename(f)
+        cells.append(d)
+    cells.sort(key=lambda d: (d["arch"], SHAPE_ORDER.get(d["shape"], 9),
+                              d["mesh"], d.get("quantized", False),
+                              d["_file"]))
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_row(d):
+    r = d["roofline"]
+    tag = ""
+    if d.get("quantized"):
+        tag = " int8"
+    base = d["_file"]
+    if base.count("__") > 2 and "int8" not in base:
+        tag += " [" + base.split("__", 3)[-1].replace(".json", "") + "]"
+    dom_t = max(r["compute_term_s"], r["memory_term_s"],
+                r["collective_term_s"])
+    frac = r["compute_term_s"] / dom_t if dom_t > 0 else 0.0
+    return ("| {arch} | {shape}{tag} | {mesh} | {c:.1f} | {m:.1f} | {l:.1f} "
+            "| {dom} | {frac:.2f} | {useful:.2f} | {gib} |").format(
+        arch=d["arch"], shape=d["shape"], tag=tag,
+        mesh="2x16x16" if "multi" in d["mesh"] else "16x16",
+        c=r["compute_term_s"] * 1e3, m=r["memory_term_s"] * 1e3,
+        l=r["collective_term_s"] * 1e3, dom=r["dominant"][:4],
+        frac=frac, useful=r["useful_flops_ratio"],
+        gib=fmt_bytes(d["memory"].get("total_bytes_per_device", 0)))
+
+
+def main():
+    cells = load()
+    baseline = [d for d in cells
+                if not d.get("quantized") and not d.get("overrides")
+                and d["_file"].count("__") == 2]
+    print(f"<!-- generated from {len(cells)} cell JSONs -->")
+    print()
+    print("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| dom | comp/dom | useful | GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for d in baseline:
+        print(roofline_row(d))
+    extras = [d for d in cells if d not in baseline]
+    if extras:
+        print("\n**Variant cells (int8 / perf-loop overrides):**\n")
+        print("| arch | shape | mesh | compute ms | memory ms | collective ms "
+              "| dom | comp/dom | useful | GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for d in extras:
+            print(roofline_row(d))
+
+
+if __name__ == "__main__":
+    main()

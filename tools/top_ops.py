@@ -1,0 +1,29 @@
+"""Rank memory/collective/flops contributors in a dumped HLO file."""
+import sys, re
+from repro.launch.hlo_analysis import parse_hlo, _shape_bytes, _trip_count, analyze
+txt = open(sys.argv[1]).read()
+kind = sys.argv[2] if len(sys.argv) > 2 else "coll"
+comps, entry = parse_hlo(txt)
+recs = []
+def walk(cname, mult):
+    comp = comps.get(cname)
+    if comp is None: return
+    for op in comp.ops:
+        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+        if kind == "coll" and base in ("all-reduce","all-gather","reduce-scatter","all-to-all","collective-permute"):
+            recs.append((_shape_bytes(op.result_type)*mult, mult, cname[:30], base, op.result_type[:70], op.line.strip()[:180]))
+        if kind == "dot" and base == "dot":
+            recs.append((_shape_bytes(op.result_type)*mult, mult, cname[:30], base, op.result_type[:70], op.line.strip()[:160]))
+        if op.opcode == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", op.line)
+            mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+            trips = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+            if mb: walk(mb.group(1), mult*trips)
+walk(entry, 1.0)
+recs.sort(reverse=True)
+for r in recs[:20]:
+    print(f"{r[0]/1e9:9.3f} GB x{r[1]:5.0f} {r[2]:30s} {r[3]:18s} {r[4]}")
+    if len(sys.argv) > 3: print("      ", r[5])
+st = analyze(txt, 256)
+print("\ncollective bytes:", {k: f"{v/1e9:.1f}GB" for k,v in st.collective_bytes.items()})
+print("memory bytes:", f"{st.memory_bytes/1e12:.2f}TB", " dot flops:", f"{st.dot_flops/1e12:.1f}T")
