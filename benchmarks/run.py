@@ -45,6 +45,12 @@ def main() -> None:
     bench_kernels.run()
     summary.append(("kernels", (time.perf_counter() - t0) * 1e6, "oracle ok"))
 
+    _section("Execution backends: simulator vs Pallas, one task-ISA stream")
+    t0 = time.perf_counter()
+    row = bench_kernels.run_backends()
+    summary.append(("backends", (time.perf_counter() - t0) * 1e6,
+                    f"x{row['speedup_x']} exact={row['exact']}"))
+
     _section("Dry-run roofline table (from experiments/dryrun)")
     t0 = time.perf_counter()
     try:

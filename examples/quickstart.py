@@ -1,4 +1,4 @@
-"""Quickstart: the full VTA stack in ~60 lines.
+"""Quickstart: the full VTA stack in ~70 lines.
 
 1. Quantize a float matmul workload to int8 (the paper's PTQ step).
 2. Lower it with the scheduler (tensorization + virtual threading).
@@ -6,12 +6,16 @@
 4. Execute on the behavioral simulator; cross-check against numpy.
 5. Time it with the cycle-level pipeline model, with and without
    virtual threading — the paper's latency-hiding result in miniature.
+6. Route the *same* encoded stream through the second engine
+   (PallasBackend) and differentially check it against the simulator —
+   the paper's heterogeneous-execution story (§3).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import hwspec, quantize as q
+from repro.core.backend import CrossBackendChecker
 from repro.core.runtime import Runtime
 from repro.core.scheduler import (Epilogue, matmul_reference,
                                   read_matmul_result, schedule_matmul)
@@ -52,6 +56,20 @@ def main() -> None:
         print(f"virtual_threads={vt}: {s.total_cycles:,} cycles, "
               f"compute utilization {s.compute_utilization:.1%}, "
               f"{s.gops(spec.freq_mhz):.1f} GOPS")
+
+    # --- 6. heterogeneous execution: one stream, two engines (§3) ---
+    rt = Runtime(spec)
+    plan = schedule_matmul(rt, xq, wq, epilogue=Epilogue(shift=shift),
+                           virtual_threads=2)
+    report = CrossBackendChecker().check_runtime(rt)
+    got = read_matmul_result(rt, plan)
+    assert report.matches, "engines diverged!"
+    assert np.array_equal(got, want), "adopted image diverged from oracle!"
+    print("cross-backend check ok: "
+          + ", ".join(f"{r.backend} {r.stats.wall_time_s * 1e3:.0f} ms"
+                      for r in report.runs)
+          + "  (pallas time includes one-time jit compile; see "
+            "benchmarks/bench_kernels.py for warmed steady-state)")
 
 
 if __name__ == "__main__":

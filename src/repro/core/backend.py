@@ -1,0 +1,567 @@
+"""Pluggable execution backends: one task-ISA stream, two engines (§3).
+
+The paper's runtime supports *heterogeneous execution*: the identical
+binary instruction stream runs on a behavioral simulator or on the FPGA,
+and the simulator doubles as the differential-testing oracle for the fast
+path.  This module reproduces that split for the jax_pallas port:
+
+  * ``SimulatorBackend`` — the cycle-capable numpy engine
+    (``simulator.run_program``), bit-exact oracle semantics;
+  * ``PallasBackend``   — interprets the *decoded* task-ISA stream,
+    coalescing each virtual-thread tile's LOAD/GEMM/ALU/STORE groups into
+    calls to the TPU-native Pallas kernels (``kernels.vta_gemm`` and
+    ``kernels.tensor_alu``), honoring the same dependence-token protocol;
+  * ``CrossBackendChecker`` — runs one encoded stream on every backend
+    against cloned devices and diffs the resulting DRAM images, turning
+    the simulator into the oracle for the fast path exactly the way the
+    paper checks the FPGA against simulation.
+
+Both engines consume the stream *after* ``IsaLayout.encode_stream`` —
+there is no side channel: whatever the scheduler lowered is what runs.
+
+Why sequential interpretation is sound: the runtime emits ``dep_push``
+flags on instructions that are already in the stream and attaches each
+``dep_pop`` to the next instruction it emits, so every token's producer
+precedes its consumer in program order.  Program order also preserves
+each module's queue order, hence it is one of the legal executions the
+token protocol admits (§2.3) — the PallasBackend verifies this while it
+runs and raises ``DeadlockError`` on streams that violate it.
+
+jax / Pallas imports are deferred to PallasBackend execution so that
+importing :mod:`repro.core` stays numpy-only.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Union, \
+    runtime_checkable
+
+import numpy as np
+
+from .driver import Device
+from .hwspec import HardwareSpec
+from .isa import (AluInsn, AluOp, FinishInsn, GemmInsn, Insn, IsaLayout,
+                  LoadStoreInsn, MemId, Opcode, route_queue,
+                  LOAD_Q, COMPUTE_Q, STORE_Q)
+from .simulator import (DeadlockError, ModuleStats, RunStats, Simulator,
+                        TimingModel, run_program, _MODULE_NAMES)
+
+
+# ----------------------------------------------------------------------
+# the backend contract
+# ----------------------------------------------------------------------
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """Anything that can run an encoded VTA instruction stream against a
+    device and report RunStats."""
+
+    name: str
+
+    def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
+                timing: Optional[TimingModel] = None) -> RunStats:
+        ...
+
+
+class SimulatorBackend:
+    """The paper's behavioral/cycle-level engine (default)."""
+
+    name = "simulator"
+
+    def __init__(self, timing: Optional[TimingModel] = None):
+        self.timing = timing
+
+    def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
+                timing: Optional[TimingModel] = None) -> RunStats:
+        t0 = time.perf_counter()
+        stats = run_program(spec, device, stream, timing=timing or self.timing)
+        stats.wall_time_s = time.perf_counter() - t0
+        stats.backend = self.name
+        return stats
+
+
+# ----------------------------------------------------------------------
+# PallasBackend: decoded-stream interpreter over the Pallas kernels
+# ----------------------------------------------------------------------
+_ALU_NAMES = {AluOp.MIN: "min", AluOp.MAX: "max", AluOp.ADD: "add",
+              AluOp.SHR: "shr", AluOp.MUL: "mul"}
+
+# token FIFO name + dep flag consumed per queue / produced per queue
+_IN_EDGES = {LOAD_Q: (("c2l", "pop_next"),),
+             COMPUTE_Q: (("l2c", "pop_prev"), ("s2c", "pop_next")),
+             STORE_Q: (("c2s", "pop_prev"),)}
+_OUT_EDGES = {LOAD_Q: (("l2c", "push_next"),),
+              COMPUTE_Q: (("c2l", "push_prev"), ("c2s", "push_next")),
+              STORE_Q: (("s2c", "push_prev"),)}
+
+
+@dataclass
+class _PendingTile:
+    """A lazily-evaluated accumulator tile: the coalesced record of one
+    virtual-thread context's reset + GEMM chunks + ALU epilogue, resolved
+    with one ``vta_gemm`` Pallas call (plus fused ALU chains) when the
+    tile is stored or otherwise observed."""
+    grid: np.ndarray                    # (iter_out, iter_in) acc element ids
+    indices: np.ndarray                 # sorted unique ids (overlap queries)
+    # snapshot GEMM operands: list of (A2 (R, k) int8, W2 (C, k) int8)
+    chunks: List[Tuple[np.ndarray, np.ndarray]] = field(default_factory=list)
+    # epilogue: ("imm", op, imm) | ("tensor", op, (R, C) int32 matrix)
+    alu_chain: List[tuple] = field(default_factory=list)
+
+
+@dataclass
+class _RunState:
+    """Per-execute() interpreter state, passed explicitly so one
+    PallasBackend instance can be shared (and re-entered) safely."""
+    sim: Simulator                          # SRAM state + eager semantics
+    pending: Dict[int, _PendingTile] = field(default_factory=dict)
+
+
+class PallasBackend:
+    """Executes a decoded task-ISA stream through the Pallas kernels.
+
+    LOADs update numpy SRAM state eagerly (DMA semantics are reused from
+    the Simulator).  GEMM/ALU instructions whose micro-coded affine index
+    pattern matches the blocked-matmul / tile-epilogue structure are
+    *coalesced* per accumulator tile and resolved by ``vta_gemm`` /
+    ``tensor_alu`` when the tile is stored; anything else falls back to
+    the simulator's eager per-instruction semantics, so arbitrary valid
+    streams still execute correctly — just without the fast path.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None,
+                 check_tokens: bool = True):
+        # interpret=None -> auto (native on TPU, interpreter elsewhere)
+        self.interpret = interpret
+        self.check_tokens = check_tokens
+
+    # ------------------------------------------------------------------
+    def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
+                timing: Optional[TimingModel] = None) -> RunStats:
+        """Same control handshake as the hardware path: the stream is
+        DMA'd to DRAM, the fetch registers are kicked, and the engine
+        runs to FINISH.  `timing` is accepted for interface parity but
+        ignored — this engine reports wall-clock, not cycles."""
+        t0 = time.perf_counter()
+        isa = IsaLayout(spec)
+        addr = device.stage_stream(stream)
+        raw = device.dram.read(
+            addr, stream.shape[0] * isa.insn_bytes,
+            dtype=np.uint64, shape=(stream.shape[0], isa.insn_words))
+        stats = self._run(spec, device, isa.decode_stream(raw))
+        device.regs.set_done()
+        stats.backend = self.name
+        stats.wall_time_s = time.perf_counter() - t0
+        return stats
+
+    # ------------------------------------------------------------------
+    def _run(self, spec: HardwareSpec, device: Device,
+             insns: List[Insn]) -> RunStats:
+        st = _RunState(sim=Simulator(spec, device))
+        sim = st.sim
+        stats = RunStats(modules={n: ModuleStats()
+                                  for n in _MODULE_NAMES.values()})
+        tokens = {"l2c": 0, "c2l": 0, "c2s": 0, "s2c": 0}
+
+        for insn in insns:
+            q = route_queue(insn)
+            if self.check_tokens:
+                for fifo, flag in _IN_EDGES[q]:
+                    if getattr(insn.dep, flag):
+                        if tokens[fifo] == 0:
+                            raise DeadlockError(
+                                f"{type(insn).__name__} pops empty dependence"
+                                f" FIFO {fifo}: stream is not a legal "
+                                f"program-order execution")
+                        tokens[fifo] -= 1
+            mstats = stats.modules[_MODULE_NAMES[q]]
+            mstats.insn_count += 1
+
+            if isinstance(insn, FinishInsn):
+                pass
+            elif isinstance(insn, LoadStoreInsn):
+                if insn.opcode == Opcode.STORE:
+                    lo = insn.sram_base
+                    hi = insn.sram_base + insn.y_size * insn.x_size
+                    self._materialize_range(st, lo, hi, stats)
+                    sim._do_store(insn, stats)
+                else:
+                    if insn.memory_type in (MemId.ACC, MemId.OUT):
+                        # both land in tile-owned state: ACC loads overwrite
+                        # accumulators, OUT loads overwrite the write-through
+                        # mirror a later STORE reads
+                        width = insn.x_pad_0 + insn.x_size + insn.x_pad_1
+                        rows = insn.y_pad_0 + insn.y_size + insn.y_pad_1
+                        self._materialize_range(
+                            st, insn.sram_base, insn.sram_base + rows * width,
+                            stats)
+                    sim._do_load(insn, stats)
+            elif isinstance(insn, GemmInsn):
+                self._gemm(st, insn, stats)
+            elif isinstance(insn, AluInsn):
+                self._alu(st, insn, stats)
+            else:
+                raise TypeError(type(insn))
+
+            if self.check_tokens:
+                for fifo, flag in _OUT_EDGES[q]:
+                    if getattr(insn.dep, flag):
+                        tokens[fifo] += 1
+                        stats.tokens_pushed += 1
+
+        # a well-formed stream leaves nothing pending, but flush anyway so
+        # partial streams (no FINISH/store) still leave coherent SRAM
+        for base in list(st.pending):
+            self._materialize(st, st.pending[base], stats)
+            del st.pending[base]
+        return stats
+
+    # ------------------------------------------------------------------
+    # pending-tile bookkeeping
+    # ------------------------------------------------------------------
+    def _materialize_range(self, st: _RunState, lo: int, hi: int,
+                           stats: RunStats) -> None:
+        for base in list(st.pending):
+            t = st.pending[base]
+            if t.indices[0] < hi and lo <= t.indices[-1]:
+                if np.any((t.indices >= lo) & (t.indices < hi)):
+                    self._materialize(st, t, stats)
+                    del st.pending[base]
+
+    def _materialize_indices(self, st: _RunState, idx: np.ndarray,
+                             stats: RunStats) -> None:
+        for base in list(st.pending):
+            t = st.pending[base]
+            if np.isin(idx, t.indices, assume_unique=False).any():
+                self._materialize(st, t, stats)
+                del st.pending[base]
+
+    @staticmethod
+    def _overlaps_pending(st: _RunState, idx: np.ndarray) -> bool:
+        return any(np.isin(idx, t.indices).any()
+                   for t in st.pending.values())
+
+    @staticmethod
+    def _decode_structure(insn, uops, dsts, srcs, wgts):
+        """Detect the 2-level-affine blocked-matmul index structure:
+        dst = f(i0, i1), src = g(i0, u), wgt = h(i1, u) with all dsts
+        distinct.  Returns (dst_grid, src_idx, wgt_idx) or None."""
+        io, ii, U = insn.iter_out, insn.iter_in, len(uops)
+        D = dsts.reshape(io, ii, U)
+        S = srcs.reshape(io, ii, U)
+        W = wgts.reshape(io, ii, U)
+        if not (D == D[:, :, :1]).all():
+            return None
+        grid = D[:, :, 0]
+        if np.unique(grid).size != grid.size:
+            return None
+        if not (S == S[:, :1, :]).all():
+            return None
+        if not (W == W[:1, :, :]).all():
+            return None
+        return grid, S[:, 0, :], W[0, :, :]
+
+    # ------------------------------------------------------------------
+    # GEMM
+    # ------------------------------------------------------------------
+    def _gemm(self, st: _RunState, insn: GemmInsn, stats: RunStats) -> None:
+        sim = st.sim
+        uops = sim.uop_layout.decode_kernel(
+            sim.uop_sram[insn.uop_bgn:insn.uop_end])
+        if not uops or insn.iter_out == 0 or insn.iter_in == 0:
+            return
+        dsts, srcs, wgts = sim._affine_indices(insn, uops)
+        struct = self._decode_structure(insn, uops, dsts, srcs, wgts)
+        if struct is None:
+            self._materialize_indices(st, np.unique(dsts), stats)
+            sim._do_gemm(insn, stats)
+            return
+        grid, src_idx, wgt_idx = struct
+
+        if insn.reset:
+            # reset opens a fresh accumulation tile; whatever overlapped
+            # before is dead (never observed) for an exact-region match,
+            # and must be resolved first otherwise
+            base = int(grid.min())
+            prev = st.pending.get(base)
+            if prev is not None and prev.grid.shape == grid.shape \
+                    and (prev.grid == grid).all():
+                del st.pending[base]
+            else:
+                self._materialize_indices(st, np.unique(grid), stats)
+            st.pending[base] = _PendingTile(
+                grid=grid, indices=np.unique(grid))
+            return
+
+        base = int(grid.min())
+        tile = st.pending.get(base)
+        if (tile is None or tile.alu_chain
+                or tile.grid.shape != grid.shape
+                or not (tile.grid == grid).all()):
+            # accumulate-onto-existing-values (or post-epilogue) GEMM:
+            # resolve lazies, then run the eager oracle semantics
+            self._materialize_indices(st, np.unique(dsts), stats)
+            sim._do_gemm(insn, stats)
+            return
+        # snapshot operands NOW: virtual threading will overwrite these
+        # SRAM contexts before the tile is stored
+        s = sim.spec
+        U = src_idx.shape[1]
+        A = sim.inp_sram[src_idx]            # (io, U, batch, block_in)
+        Wm = sim.wgt_sram[wgt_idx]           # (ii, U, block_out, block_in)
+        A2 = np.ascontiguousarray(
+            A.transpose(0, 2, 1, 3).reshape(grid.shape[0] * s.batch,
+                                            U * s.block_in))
+        W2 = np.ascontiguousarray(
+            Wm.transpose(0, 2, 1, 3).reshape(grid.shape[1] * s.block_out,
+                                             U * s.block_in))
+        tile.chunks.append((A2, W2))
+        stats.gemm_macs += (grid.size * U * s.batch
+                            * s.block_in * s.block_out)
+
+    # ------------------------------------------------------------------
+    # ALU
+    # ------------------------------------------------------------------
+    def _alu(self, st: _RunState, insn: AluInsn, stats: RunStats) -> None:
+        sim = st.sim
+        uops = sim.uop_layout.decode_kernel(
+            sim.uop_sram[insn.uop_bgn:insn.uop_end])
+        if not uops or insn.iter_out == 0 or insn.iter_in == 0:
+            return
+        s = sim.spec
+        dsts, srcs, _ = sim._affine_indices(insn, uops)
+        if len(uops) == 1:
+            # tile-epilogue shape: one uop, each dst written exactly once;
+            # src may be any affine function of the loop indices (the bias
+            # add reads a per-column staging row, self ops read dst)
+            grid = dsts.reshape(insn.iter_out, insn.iter_in)
+            src_grid = srcs.reshape(insn.iter_out, insn.iter_in)
+            tile = st.pending.get(int(grid.min()))
+            if (tile is not None and np.unique(grid).size == grid.size
+                    and tile.grid.shape == grid.shape
+                    and (tile.grid == grid).all()):
+                op = _ALU_NAMES[insn.alu_opcode]
+                if insn.use_imm:
+                    tile.alu_chain.append(("imm", op, int(insn.imm)))
+                    stats.alu_ops += grid.size * s.batch * s.block_out
+                    return
+                # tensor-tensor: src must be readable now (eager region)
+                if not self._overlaps_pending(st, np.unique(src_grid)):
+                    src_mat = self._to_matrix(sim.acc_sram[src_grid], s)
+                    tile.alu_chain.append(("tensor", op, src_mat))
+                    stats.alu_ops += grid.size * s.batch * s.block_out
+                    return
+        # fallback: eager semantics on materialized state
+        need = np.unique(dsts if insn.use_imm
+                         else np.concatenate([dsts, srcs]))
+        self._materialize_indices(st, need, stats)
+        sim._do_alu(insn, stats)
+
+    # ------------------------------------------------------------------
+    # tile resolution through the Pallas kernels
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _to_matrix(blocked: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+        """(io, ii, batch, block_out) -> (io*batch, ii*block_out)."""
+        io, ii = blocked.shape[0], blocked.shape[1]
+        return np.ascontiguousarray(
+            blocked.transpose(0, 2, 1, 3).reshape(io * spec.batch,
+                                                  ii * spec.block_out))
+
+    @staticmethod
+    def _from_matrix(mat: np.ndarray, io: int, ii: int,
+                     spec: HardwareSpec) -> np.ndarray:
+        """(io*batch, ii*block_out) -> (io, ii, batch, block_out)."""
+        return (mat.reshape(io, spec.batch, ii, spec.block_out)
+                .transpose(0, 2, 1, 3))
+
+    def _materialize(self, st: _RunState, tile: _PendingTile,
+                     stats: RunStats) -> None:
+        sim = st.sim
+        s = sim.spec
+        io, ii = tile.grid.shape
+        R, C = io * s.batch, ii * s.block_out
+        if tile.chunks:
+            acc = self._resolve_tile(tile, R, C)
+        elif tile.alu_chain:
+            acc = self._alu_chain(np.zeros((R, C), np.int32), tile.alu_chain)
+        else:
+            acc = np.zeros((R, C), np.int32)
+        sim.acc_sram[tile.grid] = self._from_matrix(acc, io, ii, s)
+        # §2.5 write-through mirror: OUT narrows with a truncating cast
+        sim.out_sram[tile.indices] = \
+            sim.acc_sram[tile.indices].astype(np.int8)
+
+    @staticmethod
+    def _requant_shift(chain: Sequence[tuple]) -> Optional[int]:
+        """If the epilogue is exactly [SHR s >= 0,] MAX -128, MIN 127 it is
+        the kernel's fused requant epilogue; returns s (0 when no shift)."""
+        ops = list(chain)
+        shift = 0
+        if ops and ops[0][:2] == ("imm", "shr") and ops[0][2] >= 0:
+            shift = ops[0][2]
+            ops = ops[1:]
+        if [o[:3] for o in ops] == [("imm", "max", -128), ("imm", "min", 127)]:
+            return shift
+        return None
+
+    def _resolve_tile(self, tile: _PendingTile, R: int, C: int) -> np.ndarray:
+        """One Pallas pipeline per tile: the concatenated-K GEMM, with the
+        ALU chain either fused into the kernel's requant epilogue (the
+        canonical shift+clip case) or chained on-device; a single host
+        transfer at the end."""
+        import jax.numpy as jnp
+
+        from ..kernels._compat import resolve_interpret
+        from ..kernels.vta_gemm.kernel import vta_gemm_pallas
+        interpret = resolve_interpret(self.interpret)
+
+        A = np.concatenate([a for a, _ in tile.chunks], axis=1)
+        W2 = np.concatenate([w for _, w in tile.chunks], axis=1)
+        K = A.shape[1]
+        bm = bn = bk = 128
+        Rp, Cp, Kp = -(-R // bm) * bm, -(-C // bn) * bn, -(-K // bk) * bk
+        Ap = np.zeros((Rp, Kp), np.int8)
+        Ap[:R, :K] = A
+        Wp = np.zeros((Kp, Cp), np.int8)
+        Wp[:K, :C] = W2.T
+
+        shift = self._requant_shift(tile.alu_chain)
+        if shift is not None:
+            out = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
+                                  epilogue="requant", shift=shift,
+                                  interpret=interpret)
+            return np.asarray(out)[:R, :C].astype(np.int32)
+        acc = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
+                              interpret=interpret)
+        if tile.alu_chain:
+            # padded rows/cols carry garbage through the chain; sliced off
+            acc = self._alu_chain(acc, tile.alu_chain, pad_to=(Rp, Cp))
+        return np.asarray(acc)[:R, :C]
+
+    def _alu_chain(self, acc, chain: Sequence[tuple],
+                   pad_to: Optional[Tuple[int, int]] = None) -> "np.ndarray":
+        """Apply the recorded epilogue; consecutive immediate ops fuse into
+        one tensor_alu pass (the §2.5 resource-balance trade).  `acc` may
+        be a numpy or on-device array; returns the same (padded) shape."""
+        import jax.numpy as jnp
+
+        from ..kernels.tensor_alu import tensor_alu
+        x = jnp.asarray(acc)
+        i = 0
+        while i < len(chain):
+            if chain[i][0] == "imm":
+                j = i
+                ops = []
+                while j < len(chain) and chain[j][0] == "imm":
+                    ops.append((chain[j][1], chain[j][2]))
+                    j += 1
+                x = tensor_alu(x, chain=tuple(ops), use_pallas=True,
+                               interpret=self.interpret)
+                i = j
+            else:
+                _, op, src = chain[i]
+                if pad_to is not None and src.shape != tuple(pad_to):
+                    padded = np.zeros(pad_to, np.int32)
+                    padded[:src.shape[0], :src.shape[1]] = src
+                    src = padded
+                x = tensor_alu(x, jnp.asarray(src), chain=((op, None),),
+                               use_pallas=True, interpret=self.interpret)
+                i += 1
+        return np.asarray(x, dtype=np.int32)
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+_REGISTRY = {"simulator": SimulatorBackend, "pallas": PallasBackend}
+
+BackendLike = Union[None, str, ExecutionBackend]
+
+
+def resolve_backend(backend: BackendLike = None) -> ExecutionBackend:
+    """None -> SimulatorBackend; a name -> registry lookup; an instance
+    passes through unchanged."""
+    if backend is None:
+        return SimulatorBackend()
+    if isinstance(backend, str):
+        try:
+            return _REGISTRY[backend]()
+        except KeyError:
+            raise ValueError(f"unknown execution backend {backend!r}; "
+                             f"known: {sorted(_REGISTRY)}") from None
+    return backend
+
+
+# ----------------------------------------------------------------------
+# differential testing across engines
+# ----------------------------------------------------------------------
+@dataclass
+class BackendRun:
+    backend: str
+    stats: RunStats
+    device: Device
+
+
+@dataclass
+class CrossBackendReport:
+    runs: List[BackendRun]
+    matches: bool
+    mismatched_bytes: int
+
+    def run_for(self, name: str) -> BackendRun:
+        for r in self.runs:
+            if r.backend == name:
+                return r
+        raise KeyError(name)
+
+    def device_for(self, name: str) -> Device:
+        return self.run_for(name).device
+
+    def stats_for(self, name: str) -> RunStats:
+        return self.run_for(name).stats
+
+    def speedup(self, slow: str = "simulator", fast: str = "pallas") -> float:
+        return (self.stats_for(slow).wall_time_s
+                / max(self.stats_for(fast).wall_time_s, 1e-12))
+
+
+class CrossBackendChecker:
+    """Run one encoded task-ISA stream on several backends against cloned
+    devices and diff the resulting DRAM images byte-for-byte — the
+    simulator-vs-hardware differential flow of the paper, with the
+    simulator as the oracle for the Pallas fast path."""
+
+    def __init__(self, backends: Sequence[BackendLike] = ("simulator",
+                                                          "pallas")):
+        self.backends = [resolve_backend(b) for b in backends]
+        if len(self.backends) < 2:
+            raise ValueError("need at least two backends to cross-check")
+
+    def run(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
+            timing: Optional[TimingModel] = None) -> CrossBackendReport:
+        runs = []
+        for b in self.backends:
+            dev = device.clone()
+            runs.append(BackendRun(b.name, b.execute(spec, dev, stream,
+                                                     timing=timing), dev))
+        ref = runs[0].device.dram.mem
+        mismatched = 0
+        for r in runs[1:]:
+            mismatched += int(np.count_nonzero(ref != r.device.dram.mem))
+        return CrossBackendReport(runs=runs, matches=mismatched == 0,
+                                  mismatched_bytes=mismatched)
+
+    def check_runtime(self, rt, timing: Optional[TimingModel] = None,
+                      adopt: str = "simulator") -> CrossBackendReport:
+        """Finalize `rt`'s pending stream, run it on every backend, then
+        adopt the named backend's memory image into rt.device so scheduled
+        results remain readable through the usual read_* helpers."""
+        stream = rt.finalize_stream()
+        report = self.run(rt.spec, rt.device, stream, timing=timing)
+        rt.device.copy_from(report.device_for(adopt))
+        rt.stats_history.extend(r.stats for r in report.runs)
+        rt.reset_stream()
+        return report

@@ -39,6 +39,23 @@ class Dram:
     def free(self, addr: int) -> None:
         self._allocs.pop(addr, None)  # bump allocator: bookkeeping only
 
+    def clone(self) -> "Dram":
+        c = Dram.__new__(Dram)
+        c.size = self.size
+        c.align = self.align
+        c.mem = self.mem.copy()
+        c._next = self._next
+        c._allocs = dict(self._allocs)
+        return c
+
+    def copy_from(self, other: "Dram") -> None:
+        """Adopt another DRAM's full state (same-size images only)."""
+        if other.size != self.size:
+            raise ValueError(f"DRAM size mismatch: {other.size} != {self.size}")
+        self.mem[:] = other.mem
+        self._next = other._next
+        self._allocs = dict(other._allocs)
+
     # -- typed access ---------------------------------------------------
     def write(self, addr: int, arr: np.ndarray) -> None:
         b = np.ascontiguousarray(arr).view(np.uint8).ravel()
@@ -78,6 +95,39 @@ class Device:
         self.regs = ControlRegisters()
         self.cache_flushes = 0
         self.cache_invalidates = 0
+
+    def clone(self) -> "Device":
+        """Independent copy of the full device state — the cross-backend
+        checker runs each engine against its own clone and diffs the
+        resulting DRAM images."""
+        c = Device.__new__(Device)
+        c.dram = self.dram.clone()
+        c.regs = ControlRegisters(self.regs.control, self.regs.insn_count,
+                                  self.regs.insns)
+        c.cache_flushes = self.cache_flushes
+        c.cache_invalidates = self.cache_invalidates
+        return c
+
+    def copy_from(self, other: "Device") -> None:
+        """Adopt another device's state (used to fold a checker clone's
+        results back into the runtime's live device)."""
+        self.dram.copy_from(other.dram)
+        self.regs.control = other.regs.control
+        self.regs.insn_count = other.regs.insn_count
+        self.regs.insns = other.regs.insns
+        self.cache_flushes = other.cache_flushes
+        self.cache_invalidates = other.cache_invalidates
+
+    def stage_stream(self, stream: np.ndarray) -> int:
+        """DMA an encoded instruction stream to DRAM and kick the fetch
+        registers (§2.4) — the shared handshake every execution engine
+        performs before running to FINISH.  Returns the stream address."""
+        addr = self.dram.alloc(stream.nbytes)
+        self.dram.write(addr, stream)
+        self.regs.insns = addr
+        self.regs.insn_count = stream.shape[0]
+        self.regs.start()
+        return addr
 
     # non-coherent-SoC cache maintenance hooks (§3.2)
     def flush_cache(self, addr: int, nbytes: int) -> None:

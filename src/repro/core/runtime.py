@@ -27,7 +27,7 @@ from .isa import (AluInsn, AluOp, DepFlags, FinishInsn, GemmInsn, Insn,
                   IsaLayout, LoadStoreInsn, MemId, Opcode, route_queue,
                   LOAD_Q, COMPUTE_Q, STORE_Q)
 from .microop import UOp, UopLayout
-from .simulator import RunStats, Simulator, TimingModel, run_program
+from .simulator import RunStats, TimingModel
 
 
 # ----------------------------------------------------------------------
@@ -128,9 +128,13 @@ class Runtime:
         self.device.flush_cache(addr, arr.nbytes)
         return addr
 
-    def copy_from_device(self, addr: int, nbytes: int, dtype, shape) -> np.ndarray:
-        self.device.invalidate_cache(addr, nbytes)
-        return self.device.dram.read(addr, nbytes, dtype=dtype, shape=shape)
+    def copy_from_device(self, addr: int, nbytes: int, dtype, shape,
+                         device: Optional[Device] = None) -> np.ndarray:
+        """`device` overrides the runtime's own device so results can be
+        read from a cross-backend checker clone."""
+        dev = device if device is not None else self.device
+        dev.invalidate_cache(addr, nbytes)
+        return dev.dram.read(addr, nbytes, dtype=dtype, shape=shape)
 
     def elem_bytes(self, mem: MemId) -> int:
         s = self.spec
@@ -280,11 +284,17 @@ class Runtime:
     # ------------------------------------------------------------------
     # stream validation + synchronize
     # ------------------------------------------------------------------
-    def validate_stream(self) -> None:
+    def validate_stream(self, require_net_zero: bool = False,
+                        start: int = 0) -> None:
         """Check token balance per dependence FIFO (a net-negative prefix
-        means guaranteed deadlock)."""
+        means guaranteed deadlock).  With require_net_zero, additionally
+        reject streams that leave unconsumed tokens behind — schedules that
+        close over their own WAR/RAW protocol (e.g. the vector-binop path)
+        must end with every FIFO drained.  `start` restricts the check to
+        the stream suffix emitted from that index on, so a self-contained
+        schedule can be validated even when composed after others."""
         bal = {"l2c": 0, "c2l": 0, "c2s": 0, "s2c": 0}
-        for insn in self._stream:
+        for insn in self._stream[start:]:
             q = route_queue(insn)
             d = insn.dep
             if q == LOAD_Q:
@@ -304,15 +314,32 @@ class Runtime:
             if v < 0:
                 raise ValueError(f"dependence FIFO {k} net balance {v} < 0: "
                                  "more pops than pushes — stream will deadlock")
+            if require_net_zero and v != 0:
+                raise ValueError(f"dependence FIFO {k} net balance {v} != 0: "
+                                 "stream leaves unconsumed tokens")
 
-    def synchronize(self, timing: Optional[TimingModel] = None,
-                    keep_stream: bool = False) -> RunStats:
-        """VTASynchronize: finalize the stream, hand off to the device,
-        block until FINISH."""
+    def finalize_stream(self) -> np.ndarray:
+        """Append FINISH, validate token balance, and encode the stream to
+        its binary task-ISA form — the single artifact every execution
+        backend consumes."""
         self._push_insn(FinishInsn(dep=DepFlags()))
         self.validate_stream()
-        stream = self.isa.encode_stream(self._stream)
-        stats = run_program(self.spec, self.device, stream, timing=timing)
+        return self.isa.encode_stream(self._stream)
+
+    def synchronize(self, timing: Optional[TimingModel] = None,
+                    keep_stream: bool = False,
+                    backend: "object | str | None" = None) -> RunStats:
+        """VTASynchronize: finalize the stream, hand off to an execution
+        backend, block until FINISH.
+
+        backend: None (default) runs the cycle-capable numpy simulator;
+        "pallas" routes the *same* encoded stream through the TPU-native
+        Pallas engine; any ExecutionBackend instance is used as-is.
+        """
+        from .backend import resolve_backend
+        stream = self.finalize_stream()
+        stats = resolve_backend(backend).execute(
+            self.spec, self.device, stream, timing=timing)
         self.stats_history.append(stats)
         if not keep_stream:
             self.reset_stream()

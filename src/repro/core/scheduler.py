@@ -121,16 +121,27 @@ class Epilogue:
 
     @property
     def n_alu_passes(self) -> int:
+        """Tensor-ALU passes the scheduler emits for this epilogue.  relu
+        combined with a clip folds into the clip's lower bound (MAX pass),
+        so it only costs its own pass when there is no clip to fold into."""
         n = 0
         if self.bias_blocked is not None:
             n += 1
         if self.shift:
             n += 1
-        if self.relu:
+        if self.relu and self.clip_lo is None:
             n += 1
         if self.clip_lo is not None:
             n += 2
         return n
+
+    @property
+    def folded_clip_lo(self) -> Optional[int]:
+        """Effective clip lower bound with relu folded in (relu == clip at
+        zero, so MAX imm=0 followed by MAX imm=lo<=0 is one MAX imm=0)."""
+        if self.relu and self.clip_lo is not None:
+            return max(0, self.clip_lo)
+        return self.clip_lo
 
 
 # ----------------------------------------------------------------------
@@ -308,14 +319,15 @@ def schedule_matmul(rt: Runtime, a: np.ndarray, w: np.ndarray,
             rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
                                         ntt, 1, "self"),
                         op=AluOp.SHR, imm=ep.shift)
-        if ep.relu:
+        clip_lo = ep.folded_clip_lo
+        if ep.relu and clip_lo is None:
             rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
                                         ntt, 1, "self"),
                         op=AluOp.MAX, imm=0)
-        if ep.clip_lo is not None:
+        if clip_lo is not None:
             rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
                                         ntt, 1, "self"),
-                        op=AluOp.MAX, imm=ep.clip_lo)
+                        op=AluOp.MAX, imm=clip_lo)
             rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
                                         ntt, 1, "self"),
                         op=AluOp.MIN, imm=ep.clip_hi)
@@ -336,11 +348,14 @@ def schedule_matmul(rt: Runtime, a: np.ndarray, w: np.ndarray,
                       bias_addr=bias_addr)
 
 
-def read_matmul_result(rt: Runtime, plan: MatmulPlan) -> np.ndarray:
+def read_matmul_result(rt: Runtime, plan: MatmulPlan,
+                       device=None) -> np.ndarray:
+    """Read back the blocked int8 result.  `device` overrides rt.device so
+    results can be read from a cloned device (cross-backend checking)."""
     spec = rt.spec
     blocked = rt.copy_from_device(
         plan.c_addr, plan.Mb * plan.Nb * spec.out_elem_bytes, np.int8,
-        (plan.Mb, plan.Nb, spec.batch, spec.block_out))
+        (plan.Mb, plan.Nb, spec.batch, spec.block_out), device=device)
     return layout.unpack_out(blocked, plan.M, plan.N, spec)
 
 
@@ -356,10 +371,11 @@ def matmul_reference(a: np.ndarray, w: np.ndarray,
         acc = acc + flat.astype(np.int64)[None, :]
     if ep.shift:
         acc = acc >> ep.shift
-    if ep.relu:
+    clip_lo = ep.folded_clip_lo  # relu folds into the clip lower bound
+    if ep.relu and clip_lo is None:
         acc = np.maximum(acc, 0)
-    if ep.clip_lo is not None:
-        acc = np.clip(acc, ep.clip_lo, ep.clip_hi)
+    if clip_lo is not None:
+        acc = np.clip(acc, clip_lo, ep.clip_hi)
     return acc.astype(np.int32).astype(np.int8)  # truncating out-store
 
 
@@ -368,7 +384,13 @@ def matmul_reference(a: np.ndarray, w: np.ndarray,
 # ----------------------------------------------------------------------
 def schedule_vector_binop(rt: Runtime, a: np.ndarray, b: np.ndarray,
                           op: AluOp = AluOp.ADD) -> Tuple[int, Tuple[int, ...]]:
-    """C = a (op) b over int32 vectors via the tensor ALU (Listing 1)."""
+    """C = a (op) b over int32 vectors via the tensor ALU (Listing 1).
+
+    Like every schedule_* entry point, this emits a self-synchronized
+    protocol for *its own* SRAM traffic only; schedules composed into one
+    stream race on shared scratchpad regions (no cross-schedule WAR
+    tokens), so synchronize between ops that share SRAM — the paper's
+    per-op VTASynchronize pattern."""
     spec = rt.spec
     lane = spec.batch * spec.block_out
     a = np.asarray(a, np.int32).ravel()
@@ -384,6 +406,7 @@ def schedule_vector_binop(rt: Runtime, a: np.ndarray, b: np.ndarray,
     c_addr = rt.buffer_alloc(ne * spec.out_elem_bytes, align=spec.out_elem_bytes)
 
     cap = spec.acc_depth // 2
+    stream_start = len(rt.stream)   # validate only this schedule's suffix
     done = 0
     while done < ne:
         cur = min(cap, ne - done)
@@ -403,18 +426,22 @@ def schedule_vector_binop(rt: Runtime, a: np.ndarray, b: np.ndarray,
         rt.dep_pop(COMPUTE_Q, STORE_Q)
         rt.store_buffer_2d(0, rt.to_elem_addr(c_addr, MemId.OUT) + done,
                            y_size=1, x_size=cur, x_stride=cur)
-        rt.dep_push(STORE_Q, COMPUTE_Q)
-        rt.dep_pop(STORE_Q, COMPUTE_Q)  # consumed by next iteration's ACC load
         done += cur
-    # the trailing s2c token is consumed by... nothing: balance it by
-    # removing the last push/pop pair cleanly:
+        if done < ne:
+            # WAR: the next chunk's ACC loads overwrite rows this store is
+            # still draining.  Only emitted when another chunk follows, so
+            # the stream ends with every dependence FIFO at net zero.
+            rt.dep_push(STORE_Q, COMPUTE_Q)
+            rt.dep_pop(STORE_Q, COMPUTE_Q)
+    rt.validate_stream(require_net_zero=True, start=stream_start)
     return c_addr, (ne, spec.batch, spec.block_out)
 
 
 def read_vector_result(rt: Runtime, c_addr: int, shape: Tuple[int, ...],
-                       n: int) -> np.ndarray:
+                       n: int, device=None) -> np.ndarray:
     ne = shape[0]
     spec = rt.spec
     blocked = rt.copy_from_device(c_addr, ne * spec.out_elem_bytes, np.int8,
-                                  (ne, spec.batch, spec.block_out))
+                                  (ne, spec.batch, spec.block_out),
+                                  device=device)
     return blocked.reshape(-1)[:n]

@@ -94,6 +94,8 @@ class RunStats:
     dram_rd_bytes: int = 0
     dram_wr_bytes: int = 0
     tokens_pushed: int = 0
+    backend: str = "simulator"   # which execution engine produced this run
+    wall_time_s: float = 0.0     # host wall-clock of the engine (not cycles)
 
     @property
     def compute_utilization(self) -> float:
@@ -392,10 +394,6 @@ class Simulator:
 def run_program(spec: HardwareSpec, device: Device, stream: np.ndarray,
                 timing: Optional[TimingModel] = None) -> RunStats:
     """Write `stream` to DRAM, kick the control regs, run to FINISH."""
-    addr = device.dram.alloc(stream.nbytes)
-    device.dram.write(addr, stream)
-    device.regs.insns = addr
-    device.regs.insn_count = stream.shape[0]
-    device.regs.start()
+    device.stage_stream(stream)
     sim = Simulator(spec, device, timing=timing)
     return sim.run()

@@ -1,0 +1,23 @@
+"""Small jax-version shims shared by the Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` after
+the 0.4.x series; the kernels support both so the repo runs on the
+container's pinned jax as well as current releases.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """interpret=None -> auto: run Mosaic-native on TPU, fall back to the
+    Pallas interpreter everywhere else (CPU CI, the cross-backend tests)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

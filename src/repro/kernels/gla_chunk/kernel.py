@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams
+
 
 def _gla_kernel(q_ref, k_ref, v_ref, la_ref, h0_ref, y_ref, hout_ref,
                 h_ref, *, nc: int):
@@ -94,7 +96,7 @@ def gla_chunk_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             jax.ShapeDtypeStruct((BH, N, P_), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, P_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, la, h0)

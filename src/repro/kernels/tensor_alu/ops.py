@@ -6,16 +6,37 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .._compat import resolve_interpret
 from .kernel import tensor_alu_pallas
 from .ref import tensor_alu_ref
+
+_LANES = 128  # VPU lane width: last dim of a native tile
 
 
 def tensor_alu(dst: jax.Array, src: Optional[jax.Array] = None,
                *, chain: Tuple[Tuple[str, Optional[int]], ...],
-               use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+               use_pallas: bool = False,
+               interpret: Optional[bool] = None,
+               bm: int = 256) -> jax.Array:
     if not use_pallas:
         return tensor_alu_ref(dst, src, chain=chain)
-    return tensor_alu_pallas(dst, src, chain=chain, interpret=interpret)
+    # The kernel wants rows in bm-sized blocks and lane-aligned columns;
+    # callers (e.g. the execution backend's tile epilogues) hand it
+    # arbitrary tile shapes, so pad here and slice the result back.
+    M, N = dst.shape
+    bm_eff = min(bm, M)
+    pad_m = (-M) % bm_eff
+    pad_n = (-N) % _LANES
+    if pad_m or pad_n:
+        widths = ((0, pad_m), (0, pad_n))
+        dst = jnp.pad(dst, widths)
+        if src is not None:
+            src = jnp.pad(src, widths)
+    out = tensor_alu_pallas(dst, src, chain=chain, bm=bm,
+                            interpret=resolve_interpret(interpret))
+    if pad_m or pad_n:
+        out = out[:M, :N]
+    return out
 
 
 def requantize(acc: jax.Array, shift: int, lo: int = -128,

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .._compat import resolve_interpret
 from .kernel import vta_gemm_pallas
 from .ref import vta_gemm_ref
 
@@ -31,13 +32,14 @@ def vta_gemm(a: jax.Array, w: jax.Array,
              bias: Optional[jax.Array] = None,
              scale: Optional[jax.Array] = None,
              *, epilogue: str = "none", shift: int = 0,
-             use_pallas: bool = False, interpret: bool = True,
+             use_pallas: bool = False, interpret: Optional[bool] = None,
              bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
     """int8 x int8 -> int32 GEMM with fused VTA epilogue.
 
     a: (M, K) int8;  w: (K, N) int8;  bias: (N,) int32;  scale: (N,) f32.
     use_pallas=False runs the jnp oracle (identical math) — used by the
     dry-run so cost_analysis sees real FLOPs; tests exercise both paths.
+    interpret=None auto-selects (native on TPU, interpreter elsewhere).
     """
     if not use_pallas:
         return vta_gemm_ref(a, w, bias, scale, epilogue=epilogue, shift=shift)
@@ -48,14 +50,15 @@ def vta_gemm(a: jax.Array, w: jax.Array,
     bp = _pad_to(bias, 0, bn) if bias is not None else None
     sp = _pad_to(scale, 0, bn) if scale is not None else None
     out = vta_gemm_pallas(ap, wp, bp, sp, epilogue=epilogue, shift=shift,
-                          bm=bm, bn=bn, bk=bk, interpret=interpret)
+                          bm=bm, bn=bn, bk=bk,
+                          interpret=resolve_interpret(interpret))
     return out[:M, :N]
 
 
 def quantized_linear(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
                      x_scale: Optional[jax.Array] = None,
                      *, use_pallas: bool = False,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """LM serving path: y(f32) = (x_q @ w_q) * (sx * sw[n]).
 
     x: float activations -> dynamically quantized to int8 per-tensor;

@@ -1,6 +1,8 @@
 """ISA encode/decode roundtrips + co-design fluidity (spec-derived widths)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hwspec
