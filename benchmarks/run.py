@@ -16,8 +16,8 @@ def _section(title):
 
 def main() -> None:
     from benchmarks import (bench_fig15_roofline, bench_fig16_e2e,
-                            bench_kernels, bench_roofline_table,
-                            bench_sec26_bandwidth)
+                            bench_kernels, bench_program,
+                            bench_roofline_table, bench_sec26_bandwidth)
 
     summary = []
 
@@ -50,6 +50,13 @@ def main() -> None:
     row = bench_kernels.run_backends()
     summary.append(("backends", (time.perf_counter() - t0) * 1e6,
                     f"x{row['speedup_x']} exact={row['exact']}"))
+
+    _section("Program-level JIT: one stream vs per-op synchronize")
+    t0 = time.perf_counter()
+    prow = bench_program.run()
+    summary.append(("program_jit", (time.perf_counter() - t0) * 1e6,
+                    f"{prow['insns']} insns, "
+                    f"x{prow['rows'][0]['speedup_x']} on sim"))
 
     _section("Dry-run roofline table (from experiments/dryrun)")
     t0 = time.perf_counter()

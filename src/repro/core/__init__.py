@@ -1,9 +1,11 @@
 """VTA core: the paper's contribution (template, ISA, runtime, simulator,
-scheduler) as a composable package."""
-from . import backend, conv, driver, hwspec, isa, layout, microop  # noqa: F401
-from . import pipeline_model, quantize, runtime, scheduler  # noqa: F401
-from . import simulator, workloads  # noqa: F401
+scheduler, program-level JIT) as a composable package."""
+from . import backend, compiler, conv, driver, hwspec, isa  # noqa: F401
+from . import layout, microop, pipeline_model, program  # noqa: F401
+from . import quantize, runtime, scheduler, simulator, workloads  # noqa: F401
 from .backend import (CrossBackendChecker, ExecutionBackend,  # noqa: F401
                       PallasBackend, SimulatorBackend, resolve_backend)
 from .hwspec import HardwareSpec, pynq, pynq_batch2, tpu_like  # noqa: F401
+from .program import CompiledProgram, Program, TensorRef  # noqa: F401
 from .runtime import Runtime  # noqa: F401
+from .scheduler import Epilogue, SramPartition  # noqa: F401

@@ -41,9 +41,9 @@ import numpy as np
 
 from .driver import Device
 from .hwspec import HardwareSpec
-from .isa import (AluInsn, AluOp, FinishInsn, GemmInsn, Insn, IsaLayout,
-                  LoadStoreInsn, MemId, Opcode, route_queue,
-                  LOAD_Q, COMPUTE_Q, STORE_Q)
+from .isa import (AluInsn, AluOp, DEP_IN_EDGES, DEP_OUT_EDGES, FinishInsn,
+                  GemmInsn, Insn, IsaLayout, LoadStoreInsn, MemId, Opcode,
+                  route_queue, LOAD_Q, COMPUTE_Q, STORE_Q)
 from .simulator import (DeadlockError, ModuleStats, RunStats, Simulator,
                         TimingModel, run_program, _MODULE_NAMES)
 
@@ -87,12 +87,9 @@ _ALU_NAMES = {AluOp.MIN: "min", AluOp.MAX: "max", AluOp.ADD: "add",
               AluOp.SHR: "shr", AluOp.MUL: "mul"}
 
 # token FIFO name + dep flag consumed per queue / produced per queue
-_IN_EDGES = {LOAD_Q: (("c2l", "pop_next"),),
-             COMPUTE_Q: (("l2c", "pop_prev"), ("s2c", "pop_next")),
-             STORE_Q: (("c2s", "pop_prev"),)}
-_OUT_EDGES = {LOAD_Q: (("l2c", "push_next"),),
-              COMPUTE_Q: (("c2l", "push_prev"), ("c2s", "push_next")),
-              STORE_Q: (("s2c", "push_prev"),)}
+# (shared with the runtime's static validator)
+_IN_EDGES = DEP_IN_EDGES
+_OUT_EDGES = DEP_OUT_EDGES
 
 
 @dataclass
@@ -353,11 +350,51 @@ class PallasBackend:
                     tile.alu_chain.append(("tensor", op, src_mat))
                     stats.alu_ops += grid.size * s.batch * s.block_out
                     return
+            # vector-ALU fast path: a dense single-uop op over the *eager*
+            # region (no pending lazy tile) — e.g. the chunked
+            # schedule_vector_binop stream — resolves through one
+            # tensor_alu Pallas call instead of the eager per-row loop
+            if (np.unique(grid).size == grid.size
+                    and not self._overlaps_pending(st, np.unique(dsts))
+                    and (insn.use_imm
+                         or not self._overlaps_pending(st,
+                                                      np.unique(srcs)))):
+                self._alu_eager_region(st, insn, grid, src_grid, stats)
+                return
         # fallback: eager semantics on materialized state
         need = np.unique(dsts if insn.use_imm
                          else np.concatenate([dsts, srcs]))
         self._materialize_indices(st, need, stats)
         sim._do_alu(insn, stats)
+
+    def _alu_eager_region(self, st: _RunState, insn: AluInsn,
+                          grid: np.ndarray, src_grid: np.ndarray,
+                          stats: RunStats) -> None:
+        """Run one dense ALU instruction over already-materialized
+        accumulator state through the tensor_alu Pallas kernel, keeping the
+        §2.5 write-through OUT mirror coherent."""
+        import jax.numpy as jnp
+
+        from ..kernels.tensor_alu import tensor_alu
+        sim = st.sim
+        s = sim.spec
+        op = _ALU_NAMES[insn.alu_opcode]
+        dst_mat = self._to_matrix(sim.acc_sram[grid], s)
+        if insn.use_imm:
+            out = tensor_alu(jnp.asarray(dst_mat),
+                             chain=((op, int(insn.imm)),),
+                             use_pallas=True, interpret=self.interpret)
+        else:
+            src_mat = self._to_matrix(sim.acc_sram[src_grid], s)
+            out = tensor_alu(jnp.asarray(dst_mat), jnp.asarray(src_mat),
+                             chain=((op, None),),
+                             use_pallas=True, interpret=self.interpret)
+        io, ii = grid.shape
+        sim.acc_sram[grid] = self._from_matrix(
+            np.asarray(out, dtype=np.int32), io, ii, s)
+        touched = np.unique(grid)
+        sim.out_sram[touched] = sim.acc_sram[touched].astype(np.int8)
+        stats.alu_ops += grid.size * s.batch * s.block_out
 
     # ------------------------------------------------------------------
     # tile resolution through the Pallas kernels

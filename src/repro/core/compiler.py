@@ -1,0 +1,168 @@
+"""Graph-to-stream compiler support: SRAM liveness, cross-op dependence
+tokens, and stream segmentation.
+
+The paper's JIT runtime lowers whole model graphs into task-ISA streams
+(§3, Fig. 16) instead of synchronizing per op.  The pieces that make that
+safe live here:
+
+  * a **liveness pass** over scratchpad regions: each lowered op gets a
+    :class:`~repro.core.scheduler.SramPartition`; ops whose partitions are
+    disjoint *and* that exchange no data through DRAM stay in flight
+    together (their load/compute/store phases interleave in one stream);
+
+  * **cross-op dependence tokens**: dependent ops — or ops forced to reuse
+    scratchpad — are separated by a full ``join_barrier`` (drain stale
+    tokens, rendezvous on the compute module, resume).  Overlapping
+    independent ops still get a ``drain_dep_tokens`` partial fence, because
+    VTA tokens are information-less: a predecessor's unconsumed tokens
+    would shift the successor's push/pop pairing one generation early and
+    silently break its own WAR protocol;
+
+  * **segmentation**: ``cpu_only`` graph nodes split the stream into
+    accelerator segments with host steps between them — real heterogeneous
+    execution, the Fig. 16 offload split executed rather than modelled.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .runtime import Runtime
+from .scheduler import SramPartition
+
+
+@dataclass
+class AccelStep:
+    """One finalized accelerator segment: a single encoded task-ISA stream
+    any execution backend can run."""
+    stream: np.ndarray
+    insn_count: int
+    n_barriers: int
+    n_drains: int
+    node_ids: Tuple[int, ...]
+
+
+@dataclass
+class CpuStep:
+    """One host-side op executed between accelerator segments."""
+    node_id: int
+
+
+def _largest_gap(depth: int, taken: Sequence[Tuple[int, int]]) -> Tuple[int, int]:
+    """Largest free (base, size) interval in [0, depth) given taken
+    (base, size) intervals."""
+    ivs = sorted((b, b + s) for b, s in taken)
+    best = (0, 0)
+    cur = 0
+    for b, e in ivs:
+        if b - cur > best[1]:
+            best = (cur, b - cur)
+        cur = max(cur, e)
+    if depth - cur > best[1]:
+        best = (cur, depth - cur)
+    return best
+
+
+class SegmentBuilder:
+    """Accumulates lowered ops into one instruction stream, deciding per op
+    whether it can overlap the ops still in flight (liveness) or needs a
+    token fence first."""
+
+    def __init__(self, rt: Runtime):
+        self.rt = rt
+        self.live: List[Tuple[SramPartition, int]] = []  # (partition, out)
+        self.n_barriers = 0
+        self.n_drains = 0
+        self.node_ids: List[int] = []
+
+    # ------------------------------------------------------------------
+    def _gap_partition(self) -> Optional[SramPartition]:
+        spec = self.rt.spec
+        parts = [p for p, _ in self.live]
+        gi = _largest_gap(spec.inp_depth, [(p.inp_base, p.inp_depth)
+                                           for p in parts])
+        gw = _largest_gap(spec.wgt_depth, [(p.wgt_base, p.wgt_depth)
+                                           for p in parts])
+        ga = _largest_gap(spec.acc_depth, [(p.acc_base, p.acc_depth)
+                                           for p in parts])
+        if min(gi[1], gw[1], ga[1]) == 0:
+            return None
+        return SramPartition(gi[0], gi[1], gw[0], gw[1], ga[0], ga[1])
+
+    @staticmethod
+    def _half_partition(spec) -> SramPartition:
+        return SramPartition(0, spec.inp_depth // 2, 0, spec.wgt_depth // 2,
+                             0, spec.acc_depth // 2)
+
+    # ------------------------------------------------------------------
+    def place(self, node_id: int, *, reads: Set[int], out_addr: int,
+              lower: Callable[[SramPartition], None],
+              wants_overlap: bool = False) -> None:
+        """Emit one op into the open stream.
+
+        reads: DRAM buffer addresses produced by earlier ops (graph inputs
+        are excluded — they are staged before the stream runs and cannot
+        race with it).  lower(sram) must choose its tiles *before* emitting
+        any instruction and raise ValueError if the partition is too small,
+        so a failed attempt leaves the stream unchanged."""
+        rt = self.rt
+        spec = rt.spec
+        self.node_ids.append(node_id)
+        live_outs = {a for _, a in self.live}
+        if not (reads & live_outs):
+            if self.live:
+                part = self._gap_partition()
+                if part is not None:
+                    try:
+                        # stale-token fence: predecessors' unconsumed
+                        # tokens must not alias this op's own pairing
+                        rt.drain_dep_tokens()
+                        self.n_drains += 1
+                        lower(part)
+                        self.live.append((part, out_addr))
+                        return
+                    except ValueError:
+                        pass  # minimum tile does not fit the gap
+            elif wants_overlap:
+                # first op of an overlappable pair: take half of each
+                # scratchpad so the independent successor has a region
+                part = self._half_partition(spec)
+                try:
+                    lower(part)
+                    self.live.append((part, out_addr))
+                    return
+                except ValueError:
+                    pass
+            else:
+                part = SramPartition.full(spec)
+                lower(part)
+                self.live.append((part, out_addr))
+                return
+        # dependent op, or no usable disjoint region: full rendezvous,
+        # then the whole scratchpad is ours again
+        if len(rt.stream):
+            rt.join_barrier()
+            self.n_barriers += 1
+        self.live = []
+        part = SramPartition.full(spec)
+        lower(part)
+        self.live.append((part, out_addr))
+
+    # ------------------------------------------------------------------
+    def finish(self) -> Optional[AccelStep]:
+        """Finalize the open stream (FINISH + static token validation +
+        binary encoding) into an AccelStep; None if nothing was emitted."""
+        if not len(self.rt.stream):
+            return None
+        stream = self.rt.finalize_stream()
+        step = AccelStep(stream=stream, insn_count=stream.shape[0],
+                         n_barriers=self.n_barriers, n_drains=self.n_drains,
+                         node_ids=tuple(self.node_ids))
+        self.rt.reset_stream()
+        self.live = []
+        self.n_barriers = 0
+        self.n_drains = 0
+        self.node_ids = []
+        return step

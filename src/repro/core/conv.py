@@ -26,8 +26,8 @@ from . import layout
 from .hwspec import HardwareSpec
 from .isa import AluOp, MemId
 from .runtime import Runtime, UopBuilder, UopKernel
-from .scheduler import (Epilogue, _ceil_div, _ThreadDeps,
-                        interleave_virtual_threads)
+from .scheduler import (Epilogue, SramPartition, _ceil_div, _ThreadDeps,
+                        interleave_virtual_threads, lower_matmul)
 
 
 @dataclass(frozen=True)
@@ -84,13 +84,16 @@ class ConvPlan:
 
 
 def choose_conv_tiles(shape: ConvShape, spec: HardwareSpec,
-                      virtual_threads: int, bias: bool) -> Tuple[int, int, int]:
+                      virtual_threads: int, bias: bool,
+                      sram: Optional[SramPartition] = None
+                      ) -> Tuple[int, int, int]:
+    sram = sram or SramPartition.full(spec)
     Cb = _ceil_div(shape.ic, spec.block_in)
     OCb = _ceil_div(shape.oc, spec.block_out)
     IWp = shape.w + 2 * shape.pad
-    inp_cap = spec.inp_depth // virtual_threads
-    wgt_cap = spec.wgt_depth // virtual_threads
-    acc_cap = spec.acc_depth // virtual_threads
+    inp_cap = sram.inp_depth // virtual_threads
+    wgt_cap = sram.wgt_depth // virtual_threads
+    acc_cap = sram.acc_depth // virtual_threads
 
     def fits(oht, ocbt, cbt):
         iht = (oht - 1) * shape.stride + shape.kh
@@ -121,44 +124,35 @@ def choose_conv_tiles(shape: ConvShape, spec: HardwareSpec,
     return oht, ocbt, cbt
 
 
-def schedule_conv2d(rt: Runtime, x: np.ndarray, w: np.ndarray,
-                    shape: ConvShape, epilogue: Optional[Epilogue] = None,
-                    virtual_threads: int = 2) -> ConvPlan:
-    """Lower y = conv2d(x, w) (+epilogue) onto VTA."""
+def lower_conv2d(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
+                 shape: ConvShape, epilogue: Optional[Epilogue] = None,
+                 bias_base: int = -1, virtual_threads: int = 2,
+                 sram: Optional[SramPartition] = None) -> Tuple[int, int, int]:
+    """Emit the direct-conv schedule into rt's open stream (element
+    addresses of already-staged blocked buffers, like ``lower_matmul``).
+    Returns the chosen (oht, ocbt, cbt) tiles."""
     spec = rt.spec
     ep = epilogue or Epilogue()
-    assert x.shape == (shape.n, shape.ic, shape.h, shape.w)
-    assert w.shape == (shape.oc, shape.ic, shape.kh, shape.kw)
+    if (ep.bias_blocked is not None) != (bias_base >= 0):
+        raise ValueError("epilogue.bias_blocked and bias_base must agree")
+    sram = sram or SramPartition.full(spec)
     S, KH, KW, pad = shape.stride, shape.kh, shape.kw, shape.pad
     OH, OW = shape.oh, shape.ow
     IWp = shape.w + 2 * pad
-
-    xb = layout.pack_conv_inp(x, spec)
-    wb = layout.pack_conv_wgt(w, spec)
-    Nb, Cb, H, W = xb.shape[0], xb.shape[1], xb.shape[2], xb.shape[3]
-    OCb = wb.shape[0]
-    x_addr = rt.copy_to_device(xb, align=spec.inp_elem_bytes)
-    w_addr = rt.copy_to_device(wb, align=spec.wgt_elem_bytes)
-    y_addr = rt.buffer_alloc(Nb * OCb * OH * OW * spec.out_elem_bytes,
-                             align=spec.out_elem_bytes)
-    b_base = -1
-    if ep.bias_blocked is not None:
-        b_addr = rt.copy_to_device(
-            np.ascontiguousarray(ep.bias_blocked, np.int32),
-            align=spec.acc_elem_bytes)
-        b_base = rt.to_elem_addr(b_addr, MemId.ACC)
+    H, W = shape.h, shape.w
+    Nb = _ceil_div(shape.n, spec.batch)
+    Cb = _ceil_div(shape.ic, spec.block_in)
+    OCb = _ceil_div(shape.oc, spec.block_out)
+    b_base = bias_base
 
     vt = virtual_threads
-    oht, ocbt, cbt = choose_conv_tiles(shape, spec, vt, ep.bias_blocked is not None)
+    oht, ocbt, cbt = choose_conv_tiles(shape, spec, vt,
+                                       ep.bias_blocked is not None, sram=sram)
     iht = (oht - 1) * S + KH
-    inp_ctx = spec.inp_depth // vt
-    wgt_ctx = spec.wgt_depth // vt
-    acc_ctx = spec.acc_depth // vt
+    inp_ctx = sram.inp_depth // vt
+    wgt_ctx = sram.wgt_depth // vt
+    acc_ctx = sram.acc_depth // vt
     deps = [_ThreadDeps() for _ in range(vt)]
-
-    x_base = rt.to_elem_addr(x_addr, MemId.INP)
-    w_base = rt.to_elem_addr(w_addr, MemId.WGT)
-    y_base = rt.to_elem_addr(y_addr, MemId.OUT)
 
     def gemm_kernel(oh_l, cbt_c, ocbt_c, acc_base, inp_base, wgt_base) -> UopKernel:
         def build(b: UopBuilder):
@@ -206,10 +200,10 @@ def schedule_conv2d(rt: Runtime, x: np.ndarray, w: np.ndarray,
         iht_c = (oht_c - 1) * S + KH
         ocb0 = jt * ocbt
         ocbt_c = min(ocbt, OCb - ocb0)
-        acc_base = t * acc_ctx
-        bias_sram = t * acc_ctx + oht * OW * ocbt
-        inp_base0 = t * inp_ctx
-        wgt_base0 = t * wgt_ctx
+        acc_base = sram.acc_base + t * acc_ctx
+        bias_sram = sram.acc_base + t * acc_ctx + oht * OW * ocbt
+        inp_base0 = sram.inp_base + t * inp_ctx
+        wgt_base0 = sram.wgt_base + t * wgt_ctx
 
         first = True
         for kt in range(n_cb):
@@ -286,8 +280,87 @@ def schedule_conv2d(rt: Runtime, x: np.ndarray, w: np.ndarray,
     tiles = [(nb, ot, jt) for nb in range(Nb)
              for ot in range(n_oh) for jt in range(n_oc)]
     interleave_virtual_threads(tiles, vt, tile_program)
+    return oht, ocbt, cbt
 
-    return ConvPlan(shape=shape, tiles=(oht, ocbt, cbt), x_addr=x_addr,
+
+def conv1x1_eligible(shape: ConvShape, spec: HardwareSpec) -> bool:
+    """Pointwise convs with unit stride map 1:1 onto the transposed-matmul
+    lowering (a blocked NCHW plane is a K-major (channel-block, pixel)
+    matrix).  batch > 1 template instances block the image dim into the
+    GEMM batch rows, which breaks the pixel-major mapping."""
+    return (shape.kh == 1 and shape.kw == 1 and shape.stride == 1
+            and shape.pad == 0 and spec.batch == 1)
+
+
+def lower_conv1x1(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
+                  shape: ConvShape, epilogue: Optional[Epilogue] = None,
+                  bias_base: int = -1, virtual_threads: int = 2,
+                  sram: Optional[SramPartition] = None) -> None:
+    """1x1-conv fast path: lower through the transposed GEMM schedule so
+    these nodes hit the Pallas GEMM fast path (ResNet C3/C8/C11-style
+    pointwise layers).  The blocked conv activation/weight/output buffers
+    are consumed *in place* — no host-side im2col, no relayout."""
+    spec = rt.spec
+    if not conv1x1_eligible(shape, spec):
+        raise ValueError(f"{shape} is not 1x1-fast-path eligible")
+    Cb = _ceil_div(shape.ic, spec.block_in)
+    OCb = _ceil_div(shape.oc, spec.block_out)
+    HW = shape.h * shape.w
+    for nb in range(shape.n):          # batch == 1 => Nb == n image planes
+        if nb:
+            # image planes reuse the same SRAM partition: rendezvous first
+            rt.join_barrier()
+        lower_matmul(rt,
+                     a_base=x_base + nb * Cb * HW,
+                     w_base=w_base,
+                     c_base=y_base + nb * OCb * HW,
+                     Mb=HW, Nb=OCb, Kb=Cb,
+                     epilogue=epilogue, bias_base=bias_base,
+                     virtual_threads=virtual_threads, sram=sram,
+                     transposed=True)
+
+
+def schedule_conv2d(rt: Runtime, x: np.ndarray, w: np.ndarray,
+                    shape: ConvShape, epilogue: Optional[Epilogue] = None,
+                    virtual_threads: int = 2,
+                    sram: Optional[SramPartition] = None,
+                    via_matmul: bool = False) -> ConvPlan:
+    """Lower y = conv2d(x, w) (+epilogue) onto VTA.  Thin wrapper over
+    ``lower_conv2d`` (or ``lower_conv1x1`` when ``via_matmul`` and the
+    shape is pointwise-eligible): stages the blocked operands in DRAM and
+    delegates stream emission to the lowering pass."""
+    spec = rt.spec
+    ep = epilogue or Epilogue()
+    assert x.shape == (shape.n, shape.ic, shape.h, shape.w)
+    assert w.shape == (shape.oc, shape.ic, shape.kh, shape.kw)
+
+    xb = layout.pack_conv_inp(x, spec)
+    wb = layout.pack_conv_wgt(w, spec)
+    Nb, Cb = xb.shape[0], xb.shape[1]
+    OCb = wb.shape[0]
+    x_addr = rt.copy_to_device(xb, align=spec.inp_elem_bytes)
+    w_addr = rt.copy_to_device(wb, align=spec.wgt_elem_bytes)
+    y_addr = rt.buffer_alloc(Nb * OCb * shape.oh * shape.ow
+                             * spec.out_elem_bytes,
+                             align=spec.out_elem_bytes)
+    b_base = -1
+    if ep.bias_blocked is not None:
+        b_addr = rt.copy_to_device(
+            np.ascontiguousarray(ep.bias_blocked, np.int32),
+            align=spec.acc_elem_bytes)
+        b_base = rt.to_elem_addr(b_addr, MemId.ACC)
+
+    kw = dict(x_base=rt.to_elem_addr(x_addr, MemId.INP),
+              w_base=rt.to_elem_addr(w_addr, MemId.WGT),
+              y_base=rt.to_elem_addr(y_addr, MemId.OUT),
+              shape=shape, epilogue=ep, bias_base=b_base,
+              virtual_threads=virtual_threads, sram=sram)
+    if via_matmul and conv1x1_eligible(shape, spec):
+        lower_conv1x1(rt, **kw)
+        tiles = (0, 0, 0)   # GEMM-path tiling; not a conv (oht, ocbt, cbt)
+    else:
+        tiles = lower_conv2d(rt, **kw)
+    return ConvPlan(shape=shape, tiles=tiles, x_addr=x_addr,
                     w_addr=w_addr, y_addr=y_addr, Nb=Nb, Cb=Cb, OCb=OCb)
 
 

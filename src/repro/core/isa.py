@@ -52,6 +52,18 @@ class AluOp(IntEnum):
 # module ids for dependence-token routing
 LOAD_Q, COMPUTE_Q, STORE_Q = 1, 2, 3
 
+# Dependence-edge tables shared by every stream consumer (runtime validator,
+# backends): which token FIFO a queue's instruction consumes / produces, and
+# the dep flag that requests it.  Each module consumes from a disjoint FIFO
+# set — the property that makes greedy FIFO-order replay an *exact*
+# deadlock check (firing an enabled instruction can never disable another).
+DEP_IN_EDGES = {LOAD_Q: (("c2l", "pop_next"),),
+                COMPUTE_Q: (("l2c", "pop_prev"), ("s2c", "pop_next")),
+                STORE_Q: (("c2s", "pop_prev"),)}
+DEP_OUT_EDGES = {LOAD_Q: (("l2c", "push_next"),),
+                 COMPUTE_Q: (("c2l", "push_prev"), ("c2s", "push_next")),
+                 STORE_Q: (("s2c", "push_prev"),)}
+
 
 @dataclass
 class DepFlags:

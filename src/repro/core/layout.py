@@ -28,6 +28,43 @@ def pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
 
 
 # ----------------------------------------------------------------------
+# generic blocked layouts (parameterized over the block sizes; the
+# spec-typed pack_/unpack_ helpers below are instances of these)
+# ----------------------------------------------------------------------
+def block2d(a: np.ndarray, rb: int, cb: int) -> np.ndarray:
+    """(R, C) -> (Rb, Cb, rb, cb); element (r_blk, c_blk)."""
+    a = pad_to(pad_to(a, 0, rb), 1, cb)
+    R, C = a.shape
+    return (a.reshape(R // rb, rb, C // cb, cb)
+            .transpose(0, 2, 1, 3).copy())
+
+
+def unblock2d(blocked: np.ndarray, R: int, C: int) -> np.ndarray:
+    """(Rb, Cb, rb, cb) -> (R, C) — inverse of block2d."""
+    Rb, Cb, rb, cb = blocked.shape
+    full = blocked.transpose(0, 2, 1, 3).reshape(Rb * rb, Cb * cb)
+    return full[:R, :C]
+
+
+def block_nchw(x: np.ndarray, rb: int, cb: int) -> np.ndarray:
+    """(N, C, H, W) -> (Nb, Cb, H, W, rb, cb); element (n_blk, c_blk, h, w).
+    Covers both conv activations (rb=BATCH, cb=BLOCK_IN) and conv weights
+    (rb=BLOCK_OUT, cb=BLOCK_IN over (OC, IC, KH, KW))."""
+    x = pad_to(pad_to(x, 0, rb), 1, cb)
+    N, C, H, W = x.shape
+    return (x.reshape(N // rb, rb, C // cb, cb, H, W)
+            .transpose(0, 2, 4, 5, 1, 3).copy())
+
+
+def unblock_nchw(blocked: np.ndarray, N: int, C: int) -> np.ndarray:
+    """(Nb, Cb, H, W, rb, cb) -> (N, C, H, W) — inverse of block_nchw."""
+    Nb, Cb, H, W, rb, cb = blocked.shape
+    full = (blocked.transpose(0, 4, 1, 5, 2, 3)
+            .reshape(Nb * rb, Cb * cb, H, W))
+    return full[:N, :C]
+
+
+# ----------------------------------------------------------------------
 # matmul layouts:  A:(M,K) int8,  W:(N,K) int8,  C:(M,N)
 # ----------------------------------------------------------------------
 def pack_inp(a: np.ndarray, spec: HardwareSpec) -> np.ndarray:

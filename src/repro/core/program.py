@@ -1,0 +1,571 @@
+"""Program-level JIT: compile a multi-op graph into one task-ISA stream.
+
+The paper's runtime is not a per-op affair: its JIT compiler lowers whole
+model graphs into instruction streams and splits work heterogeneously
+between CPU and accelerator (§3, Fig. 16; TVM, arXiv 1802.04799).  This
+module is that module-level JIT for the port:
+
+    prog = Program(spec)
+    x = prog.input("x", (128, 256))
+    w1 = prog.input("w1", (256, 256))
+    w2 = prog.input("w2", (64, 256))
+    h = prog.matmul(x, w1, epilogue=Epilogue(shift=7, relu=True))
+    y = prog.matmul(h, w2, epilogue=Epilogue(shift=7))
+    compiled = prog.compile()
+    out = compiled(x=..., w1=..., w2=...)          # simulator
+    out = compiled(backend="pallas", x=..., ...)   # same stream, fast path
+
+``compile()`` runs the whole lowering once — SRAM liveness across ops,
+cross-op WAR/RAW dependence tokens, stream segmentation around
+``cpu_only`` ops — and the result is cached by ``(spec, graph signature)``:
+a second call with new data only rebinds the DRAM input buffers and
+re-runs the already-encoded streams (the paper's JIT-cost amortization).
+Intermediate tensors chain through DRAM in their blocked layouts; no host
+relayout happens between fused ops.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import hwspec as _hwspec, layout
+from .backend import BackendLike, resolve_backend
+from .compiler import AccelStep, CpuStep, SegmentBuilder
+from .conv import (ConvShape, conv1x1_eligible, conv2d_reference,
+                   lower_conv1x1, lower_conv2d)
+from .hwspec import HardwareSpec
+from .isa import AluOp, MemId
+from .runtime import Runtime
+from .scheduler import Epilogue, SramPartition, _ceil_div, lower_matmul, \
+    lower_vector_binop
+from .simulator import RunStats
+
+# Counts every accelerator-segment build (scheduling + encoding).  Tests
+# assert it stays flat across repeated CompiledProgram calls and cached
+# compiles — the JIT-amortization contract.
+STREAM_BUILDS = 0
+
+_COMPILE_CACHE: Dict[Any, "CompiledProgram"] = {}
+
+
+def clear_compile_cache() -> None:
+    _COMPILE_CACHE.clear()
+
+
+# ----------------------------------------------------------------------
+# tensor metadata: logical shape + blocked DRAM layout
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class TensorMeta:
+    """How a graph tensor lives in DRAM.
+
+    kind: "mat"  — (M, C) blocked (Mb, Cb, BATCH, block)
+          "wgt"  — (N, K) blocked (Nb, Kb, BLOCK_OUT, BLOCK_IN)
+          "conv" — (N, C, H, W) blocked (Nb, Cb, H, W, BATCH, block)
+          "cwgt" — (OC, IC, KH, KW) blocked (OCb, Cb, KH, KW, B_OUT, B_IN)
+          "vec"  — (n,) blocked (ne, BATCH, BLOCK_OUT)
+    block: the channel/column block size (BLOCK_IN for accelerator inputs,
+    BLOCK_OUT for accelerator outputs — compatible when they are equal,
+    which is what lets op outputs chain into op inputs with zero copies).
+    """
+    kind: str
+    shape: Tuple[int, ...]
+    dtype: str            # "int8" | "int32"
+    block: int = 0
+
+    def np_dtype(self):
+        return np.int8 if self.dtype == "int8" else np.int32
+
+    def blocked_shape(self, spec: HardwareSpec) -> Tuple[int, ...]:
+        if self.kind == "mat":
+            M, C = self.shape
+            return (_ceil_div(M, spec.batch), _ceil_div(C, self.block),
+                    spec.batch, self.block)
+        if self.kind == "wgt":
+            N, K = self.shape
+            return (_ceil_div(N, spec.block_out), _ceil_div(K, spec.block_in),
+                    spec.block_out, spec.block_in)
+        if self.kind == "conv":
+            N, C, H, W = self.shape
+            return (_ceil_div(N, spec.batch), _ceil_div(C, self.block),
+                    H, W, spec.batch, self.block)
+        if self.kind == "cwgt":
+            OC, IC, KH, KW = self.shape
+            return (_ceil_div(OC, spec.block_out),
+                    _ceil_div(IC, spec.block_in),
+                    KH, KW, spec.block_out, spec.block_in)
+        if self.kind == "vec":
+            (n,) = self.shape
+            lane = spec.batch * spec.block_out
+            return (_ceil_div(n, lane), spec.batch, spec.block_out)
+        raise ValueError(self.kind)
+
+    def nbytes(self, spec: HardwareSpec) -> int:
+        return int(np.prod(self.blocked_shape(spec))) \
+            * np.dtype(self.np_dtype()).itemsize
+
+    def elem_bytes(self, spec: HardwareSpec) -> int:
+        """Bytes per DMA element (one tensor-register row) of this layout —
+        the buffer's required DRAM alignment."""
+        bs = self.blocked_shape(spec)
+        return int(np.prod(bs[-2:])) * np.dtype(self.np_dtype()).itemsize
+
+    # ---- host <-> blocked DRAM image ----
+    def pack(self, arr: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+        arr = np.asarray(arr, self.np_dtype())
+        if arr.shape != self.shape:
+            raise ValueError(f"expected shape {self.shape}, got {arr.shape}")
+        if self.kind == "mat":
+            return layout.block2d(arr, spec.batch, self.block)
+        if self.kind == "wgt":
+            return layout.block2d(arr, spec.block_out, spec.block_in)
+        if self.kind == "conv":
+            return layout.block_nchw(arr, spec.batch, self.block)
+        if self.kind == "cwgt":
+            return layout.block_nchw(arr, spec.block_out, spec.block_in)
+        if self.kind == "vec":
+            out = np.zeros(self.blocked_shape(spec), self.np_dtype())
+            out.reshape(-1)[:arr.size] = arr
+            return out
+        raise ValueError(self.kind)
+
+    def unpack(self, blocked: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+        if self.kind in ("mat", "wgt"):
+            return layout.unblock2d(blocked, *self.shape)
+        if self.kind in ("conv", "cwgt"):
+            return layout.unblock_nchw(blocked, self.shape[0], self.shape[1])
+        if self.kind == "vec":
+            return blocked.reshape(-1)[:self.shape[0]].copy()
+        raise ValueError(self.kind)
+
+
+@dataclass(frozen=True)
+class TensorRef:
+    """Handle to a graph tensor (input or op result)."""
+    idx: int
+    program: "Program" = field(repr=False, compare=False)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.program.nodes[self.idx].shape
+
+
+@dataclass
+class Node:
+    idx: int
+    op: str                      # input | matmul | conv2d | vbinop | cpu
+    name: str
+    inputs: Tuple[int, ...] = ()
+    shape: Tuple[int, ...] = ()
+    meta: Optional[TensorMeta] = None
+    epilogue: Optional[Epilogue] = None
+    conv: Optional[ConvShape] = None
+    alu_op: Optional[AluOp] = None
+    fast_1x1: bool = True
+    declared_dtype: str = "int8"
+    fn: Optional[Callable] = None
+    fn_key: Optional[str] = None   # stable cache key for host fns
+
+
+def _epilogue_sig(ep: Optional[Epilogue]):
+    if ep is None:
+        return None
+    bias = None
+    if ep.bias_blocked is not None:
+        bias = hashlib.sha1(
+            np.ascontiguousarray(ep.bias_blocked, np.int32).tobytes()
+        ).hexdigest()
+    return (ep.shift, ep.clip_lo, ep.clip_hi, ep.relu, bias)
+
+
+# ----------------------------------------------------------------------
+# the graph builder
+# ----------------------------------------------------------------------
+class Program:
+    """Declarative multi-op graph over one VTA template instance."""
+
+    def __init__(self, spec: Optional[HardwareSpec] = None,
+                 virtual_threads: int = 2):
+        self.spec = spec or _hwspec.pynq()
+        self.virtual_threads = virtual_threads
+        self.nodes: List[Node] = []
+        self._outputs: List[int] = []
+
+    # ------------------------------------------------------------------
+    def _add(self, node: Node) -> TensorRef:
+        if any(n.name == node.name for n in self.nodes):
+            raise ValueError(f"duplicate node name {node.name!r}")
+        self.nodes.append(node)
+        return TensorRef(node.idx, self)
+
+    def _node(self, ref: TensorRef) -> Node:
+        if ref.program is not self:
+            raise ValueError("TensorRef belongs to a different Program")
+        return self.nodes[ref.idx]
+
+    def _require(self, ref: TensorRef, meta: TensorMeta, role: str) -> Node:
+        """Bind (for inputs) or check (for op results) a tensor's layout."""
+        node = self._node(ref)
+        if node.meta is None:
+            if node.op == "input" and node.declared_dtype != meta.dtype:
+                raise ValueError(
+                    f"input {node.name!r} declared {node.declared_dtype} "
+                    f"but {role} consumes {meta.dtype}")
+            node.meta = meta
+            return node
+        m = node.meta
+        if (m.kind, m.dtype) != (meta.kind, meta.dtype) or \
+                (meta.block and m.block != meta.block):
+            raise ValueError(
+                f"node {node.name!r} has layout {m} but {role} needs "
+                f"{meta}; chain through a host op to relayout")
+        return node
+
+    # ------------------------------------------------------------------
+    # graph construction
+    # ------------------------------------------------------------------
+    def input(self, name: str, shape: Sequence[int],
+              dtype: str = "int8") -> TensorRef:
+        return self._add(Node(idx=len(self.nodes), op="input", name=name,
+                              shape=tuple(shape), declared_dtype=dtype))
+
+    def matmul(self, a: TensorRef, w: TensorRef,
+               epilogue: Optional[Epilogue] = None,
+               name: Optional[str] = None) -> TensorRef:
+        """C[M,N] = clip((A[M,K] @ W[N,K]^T + bias) >> shift)."""
+        spec = self.spec
+        M, K = self._node(a).shape
+        N, K2 = self._node(w).shape
+        if K != K2:
+            raise ValueError(f"matmul K mismatch: {K} vs {K2}")
+        self._require(a, TensorMeta("mat", (M, K), "int8",
+                                    spec.block_in), "matmul A")
+        self._require(w, TensorMeta("wgt", (N, K), "int8"), "matmul W")
+        idx = len(self.nodes)
+        return self._add(Node(
+            idx=idx, op="matmul", name=name or f"matmul{idx}",
+            inputs=(a.idx, w.idx), shape=(M, N),
+            meta=TensorMeta("mat", (M, N), "int8", spec.block_out),
+            epilogue=epilogue))
+
+    def conv2d(self, x: TensorRef, w: TensorRef, shape: ConvShape,
+               epilogue: Optional[Epilogue] = None, cpu_only: bool = False,
+               fast_1x1: bool = True, name: Optional[str] = None) -> TensorRef:
+        """y = conv2d(x, w) (+epilogue).  cpu_only ops run host-side between
+        accelerator segments (the paper's C1 split); pointwise unit-stride
+        convs take the transposed-GEMM fast path unless fast_1x1=False."""
+        spec = self.spec
+        if self._node(x).shape != (shape.n, shape.ic, shape.h, shape.w):
+            raise ValueError(f"conv input shape {self._node(x).shape} != "
+                             f"{(shape.n, shape.ic, shape.h, shape.w)}")
+        if self._node(w).shape != (shape.oc, shape.ic, shape.kh, shape.kw):
+            raise ValueError("conv weight shape mismatch")
+        self._require(x, TensorMeta("conv", self._node(x).shape, "int8",
+                                    spec.block_in), "conv2d x")
+        self._require(w, TensorMeta("cwgt", self._node(w).shape, "int8"),
+                      "conv2d w")
+        idx = len(self.nodes)
+        out_shape = (shape.n, shape.oc, shape.oh, shape.ow)
+        if cpu_only:
+            ep = epilogue
+            return self._add(Node(
+                idx=idx, op="cpu", name=name or f"cpu_conv{idx}",
+                inputs=(x.idx, w.idx), shape=out_shape,
+                # host output is packed consumer-ready (BLOCK_IN channels)
+                meta=TensorMeta("conv", out_shape, "int8", spec.block_in),
+                conv=shape, epilogue=epilogue,
+                fn=lambda xv, wv, _s=shape, _e=ep: conv2d_reference(
+                    xv, wv, _s, epilogue=_e),
+                fn_key=f"conv2d_reference.{shape}.{_epilogue_sig(epilogue)}"))
+        return self._add(Node(
+            idx=idx, op="conv2d", name=name or f"conv{idx}",
+            inputs=(x.idx, w.idx), shape=out_shape,
+            meta=TensorMeta("conv", out_shape, "int8", spec.block_out),
+            epilogue=epilogue, conv=shape, fast_1x1=fast_1x1))
+
+    def vector_binop(self, a: TensorRef, b: TensorRef,
+                     op: AluOp = AluOp.ADD,
+                     name: Optional[str] = None) -> TensorRef:
+        """c = a (op) b over int32 vectors through the tensor ALU; the
+        result is the narrowed int8 out-store (Listing 1 semantics)."""
+        spec = self.spec
+        (n,) = self._node(a).shape
+        if self._node(b).shape != (n,):
+            raise ValueError("vector_binop length mismatch")
+        self._require(a, TensorMeta("vec", (n,), "int32",
+                                    spec.block_out), "vector a")
+        self._require(b, TensorMeta("vec", (n,), "int32",
+                                    spec.block_out), "vector b")
+        idx = len(self.nodes)
+        return self._add(Node(
+            idx=idx, op="vbinop", name=name or f"vec{idx}",
+            inputs=(a.idx, b.idx), shape=(n,),
+            meta=TensorMeta("vec", (n,), "int8", spec.block_out),
+            alu_op=op))
+
+    def add(self, a: TensorRef, b: TensorRef, **kw) -> TensorRef:
+        return self.vector_binop(a, b, op=AluOp.ADD, **kw)
+
+    def host(self, fn: Callable, *args: TensorRef,
+             shape: Sequence[int], kind: str = "conv", dtype: str = "int8",
+             name: Optional[str] = None, key: Optional[str] = None
+             ) -> TensorRef:
+        """Arbitrary host-side op on logical numpy arrays; splits the
+        stream into accelerator segments around it.  Inputs must already
+        have a bound layout (consume them with a typed op first, or use
+        typed inputs).  Programs containing keyless host fns are not
+        eligible for the compile cache."""
+        spec = self.spec
+        for r in args:
+            if self._node(r).meta is None:
+                raise ValueError(
+                    f"host-op input {self._node(r).name!r} has no bound "
+                    "layout yet — consume it with a typed op first")
+        block = spec.block_out if kind == "vec" else spec.block_in
+        idx = len(self.nodes)
+        return self._add(Node(
+            idx=idx, op="cpu", name=name or f"host{idx}",
+            inputs=tuple(r.idx for r in args), shape=tuple(shape),
+            meta=TensorMeta(kind, tuple(shape), dtype, block),
+            fn=fn, fn_key=key))
+
+    def output(self, ref: TensorRef) -> TensorRef:
+        self._node(ref)
+        if ref.idx not in self._outputs:
+            self._outputs.append(ref.idx)
+        return ref
+
+    # ------------------------------------------------------------------
+    # signature + compile
+    # ------------------------------------------------------------------
+    def signature(self):
+        """Hashable description of (spec, graph); None if uncacheable
+        (keyless host fns)."""
+        rows = []
+        for n in self.nodes:
+            if n.op == "cpu" and n.fn_key is None:
+                return None
+            rows.append((n.op, n.name, n.inputs, n.shape,
+                         n.meta, _epilogue_sig(n.epilogue), n.conv,
+                         n.alu_op, n.fast_1x1, n.fn_key))
+        return (self.spec, self.virtual_threads, tuple(rows),
+                tuple(self._outputs))
+
+    def compile(self, use_cache: bool = True) -> "CompiledProgram":
+        sig = self.signature()
+        if use_cache and sig is not None and sig in _COMPILE_CACHE:
+            return _COMPILE_CACHE[sig]
+        compiled = _build(self)
+        if use_cache and sig is not None:
+            _COMPILE_CACHE[sig] = compiled
+        return compiled
+
+
+# ----------------------------------------------------------------------
+# compilation: graph -> buffers + encoded stream segments
+# ----------------------------------------------------------------------
+def _build(prog: Program) -> "CompiledProgram":
+    global STREAM_BUILDS
+    spec = prog.spec
+    vt = prog.virtual_threads
+    rt = Runtime(spec)
+    addrs: Dict[int, int] = {}
+
+    # resolve output set first: a never-consumed input has no layout
+    out_ids = list(prog._outputs)
+    if not out_ids:
+        non_inputs = [n.idx for n in prog.nodes if n.op != "input"]
+        if not non_inputs:
+            raise ValueError("empty program")
+        out_ids = [non_inputs[-1]]
+
+    for n in prog.nodes:
+        if n.meta is None:
+            raise ValueError(f"input {n.name!r} is never consumed — "
+                             "its DRAM layout is undetermined")
+        addrs[n.idx] = rt.buffer_alloc(n.meta.nbytes(spec),
+                                       align=n.meta.elem_bytes(spec))
+
+    def elem(nid: int) -> int:
+        n = prog.nodes[nid]
+        return addrs[nid] // n.meta.elem_bytes(spec)
+
+    # bias constants are part of the graph: staged at compile time
+    bias_base: Dict[int, int] = {}
+    for n in prog.nodes:
+        if n.op in ("matmul", "conv2d") and n.epilogue is not None \
+                and n.epilogue.bias_blocked is not None:
+            addr = rt.copy_to_device(
+                np.ascontiguousarray(n.epilogue.bias_blocked, np.int32),
+                align=spec.acc_elem_bytes)
+            bias_base[n.idx] = rt.to_elem_addr(addr, MemId.ACC)
+
+    op_outputs = {n.idx for n in prog.nodes if n.op != "input"}
+
+    # the accelerator node following each accelerator node *within its
+    # segment* — a cpu step in between closes the stream, so ops separated
+    # by one can never overlap and must not hedge SRAM for it
+    next_in_segment: Dict[int, Node] = {}
+    prev_accel: Optional[Node] = None
+    for n in prog.nodes:
+        if n.op == "cpu":
+            prev_accel = None
+        elif n.op in ("matmul", "conv2d", "vbinop"):
+            if prev_accel is not None:
+                next_in_segment[prev_accel.idx] = n
+            prev_accel = n
+
+    def make_lower(n: Node) -> Callable[[SramPartition], None]:
+        if n.op == "matmul":
+            a, w = (prog.nodes[i] for i in n.inputs)
+            Mb = _ceil_div(a.shape[0], spec.batch)
+            Kb = _ceil_div(a.shape[1], spec.block_in)
+            Nb = _ceil_div(w.shape[0], spec.block_out)
+
+            def lower(sram, n=n, a=a, w=w, Mb=Mb, Nb=Nb, Kb=Kb):
+                lower_matmul(rt, a_base=elem(a.idx), w_base=elem(w.idx),
+                             c_base=elem(n.idx), Mb=Mb, Nb=Nb, Kb=Kb,
+                             epilogue=n.epilogue,
+                             bias_base=bias_base.get(n.idx, -1),
+                             virtual_threads=vt, sram=sram)
+            return lower
+        if n.op == "conv2d":
+            x, w = (prog.nodes[i] for i in n.inputs)
+            use_1x1 = n.fast_1x1 and conv1x1_eligible(n.conv, spec)
+
+            def lower(sram, n=n, x=x, w=w, use_1x1=use_1x1):
+                f = lower_conv1x1 if use_1x1 else lower_conv2d
+                f(rt, x_base=elem(x.idx), w_base=elem(w.idx),
+                  y_base=elem(n.idx), shape=n.conv, epilogue=n.epilogue,
+                  bias_base=bias_base.get(n.idx, -1),
+                  virtual_threads=vt, sram=sram)
+            return lower
+        if n.op == "vbinop":
+            a, b = (prog.nodes[i] for i in n.inputs)
+            ne = n.meta.blocked_shape(spec)[0]
+
+            def lower(sram, n=n, a=a, b=b, ne=ne):
+                lower_vector_binop(rt, a_base=elem(a.idx), b_base=elem(b.idx),
+                                   c_base=elem(n.idx), ne=ne, op=n.alu_op,
+                                   sram=sram)
+            return lower
+        raise ValueError(n.op)
+
+    steps: List[Union[AccelStep, CpuStep]] = []
+    seg = SegmentBuilder(rt)
+    for n in prog.nodes:
+        if n.op == "input":
+            continue
+        if n.op == "cpu":
+            step = seg.finish()
+            if step is not None:
+                steps.append(step)
+                STREAM_BUILDS += 1
+            steps.append(CpuStep(node_id=n.idx))
+            continue
+        nxt = next_in_segment.get(n.idx)
+        reads = {addrs[i] for i in n.inputs if i in op_outputs}
+        seg.place(n.idx, reads=reads, out_addr=addrs[n.idx],
+                  lower=make_lower(n),
+                  wants_overlap=(nxt is not None
+                                 and n.idx not in nxt.inputs))
+    step = seg.finish()
+    if step is not None:
+        steps.append(step)
+        STREAM_BUILDS += 1
+
+    input_ids = {n.name: n.idx for n in prog.nodes if n.op == "input"}
+    return CompiledProgram(spec=spec, nodes=list(prog.nodes), addrs=addrs,
+                           steps=steps, input_ids=input_ids,
+                           output_ids=out_ids, device=rt.device)
+
+
+# ----------------------------------------------------------------------
+# the compiled artifact
+# ----------------------------------------------------------------------
+@dataclass
+class CompiledProgram:
+    """Encoded stream segments + bound DRAM buffers: call with new input
+    data as many times as you like — no re-scheduling happens."""
+    spec: HardwareSpec
+    nodes: List[Node]
+    addrs: Dict[int, int]
+    steps: List[Union[AccelStep, CpuStep]]
+    input_ids: Dict[str, int]
+    output_ids: List[int]
+    device: Any
+    calls: int = 0
+    last_stats: List[RunStats] = field(default_factory=list)
+
+    # ---- introspection -------------------------------------------------
+    @property
+    def accel_steps(self) -> List[AccelStep]:
+        return [s for s in self.steps if isinstance(s, AccelStep)]
+
+    @property
+    def cpu_steps(self) -> List[CpuStep]:
+        return [s for s in self.steps if isinstance(s, CpuStep)]
+
+    @property
+    def insn_count(self) -> int:
+        return sum(s.insn_count for s in self.accel_steps)
+
+    @property
+    def n_barriers(self) -> int:
+        return sum(s.n_barriers for s in self.accel_steps)
+
+    def describe(self) -> str:
+        parts = []
+        for s in self.steps:
+            if isinstance(s, AccelStep):
+                names = ",".join(self.nodes[i].name for i in s.node_ids)
+                parts.append(f"accel[{names}: {s.insn_count} insns, "
+                             f"{s.n_barriers} barriers]")
+            else:
+                parts.append(f"cpu[{self.nodes[s.node_id].name}]")
+        return " -> ".join(parts)
+
+    # ---- data movement -------------------------------------------------
+    def _write(self, nid: int, arr: np.ndarray) -> None:
+        node = self.nodes[nid]
+        packed = node.meta.pack(arr, self.spec)
+        self.device.dram.write(self.addrs[nid], packed)
+        self.device.flush_cache(self.addrs[nid], packed.nbytes)
+
+    def _read(self, nid: int) -> np.ndarray:
+        node = self.nodes[nid]
+        meta = node.meta
+        blocked = self.device.dram.read(
+            self.addrs[nid], meta.nbytes(self.spec),
+            dtype=meta.np_dtype(), shape=meta.blocked_shape(self.spec))
+        return meta.unpack(blocked, self.spec)
+
+    # ---- execution -----------------------------------------------------
+    def __call__(self, backend: BackendLike = None,
+                 **inputs: np.ndarray) -> Union[np.ndarray,
+                                                Dict[str, np.ndarray]]:
+        missing = set(self.input_ids) - set(inputs)
+        extra = set(inputs) - set(self.input_ids)
+        if missing or extra:
+            raise ValueError(f"inputs mismatch: missing {sorted(missing)}, "
+                             f"unexpected {sorted(extra)}")
+        for name, arr in inputs.items():
+            self._write(self.input_ids[name], arr)
+        eng = resolve_backend(backend)
+        self.calls += 1
+        self.last_stats = []
+        for step in self.steps:
+            if isinstance(step, AccelStep):
+                self.last_stats.append(
+                    eng.execute(self.spec, self.device, step.stream))
+            else:
+                node = self.nodes[step.node_id]
+                args = [self._read(i) for i in node.inputs]
+                self._write(step.node_id, node.fn(*args))
+        outs = {self.nodes[i].name: self._read(i) for i in self.output_ids}
+        if len(outs) == 1:
+            return next(iter(outs.values()))
+        return outs

@@ -23,11 +23,11 @@ import numpy as np
 
 from .driver import Device
 from .hwspec import HardwareSpec
-from .isa import (AluInsn, AluOp, DepFlags, FinishInsn, GemmInsn, Insn,
-                  IsaLayout, LoadStoreInsn, MemId, Opcode, route_queue,
-                  LOAD_Q, COMPUTE_Q, STORE_Q)
+from .isa import (AluInsn, AluOp, DepFlags, DEP_IN_EDGES, DEP_OUT_EDGES,
+                  FinishInsn, GemmInsn, Insn, IsaLayout, LoadStoreInsn,
+                  MemId, Opcode, route_queue, LOAD_Q, COMPUTE_Q, STORE_Q)
 from .microop import UOp, UopLayout
-from .simulator import RunStats, TimingModel
+from .simulator import RunStats, TimingModel, _MODULE_NAMES
 
 
 # ----------------------------------------------------------------------
@@ -189,6 +189,95 @@ class Runtime:
         self._last_in_queue[q] = idx
         return idx
 
+    def noop(self, queue: int) -> int:
+        """Zero-extent instruction: no memory effect, but it occupies a slot
+        in its module's FIFO and can carry dependence flags — the program
+        compiler's barrier primitive for cross-op WAR/RAW joins in a
+        composed stream."""
+        if queue == LOAD_Q:
+            return self._push_insn(LoadStoreInsn(
+                opcode=Opcode.LOAD, dep=DepFlags(), memory_type=MemId.INP,
+                sram_base=0, dram_base=0, y_size=0, x_size=0, x_stride=0))
+        if queue == STORE_Q:
+            return self._push_insn(LoadStoreInsn(
+                opcode=Opcode.STORE, dep=DepFlags(), memory_type=MemId.OUT,
+                sram_base=0, dram_base=0, y_size=0, x_size=0, x_stride=0))
+        if queue == COMPUTE_Q:
+            return self._push_insn(GemmInsn(
+                dep=DepFlags(), reset=False, uop_bgn=0, uop_end=0,
+                iter_out=0, iter_in=0, dst_factor_out=0, dst_factor_in=0,
+                src_factor_out=0, src_factor_in=0, wgt_factor_out=0,
+                wgt_factor_in=0))
+        raise ValueError(f"unknown queue {queue}")
+
+    def token_balance(self, start: int = 0) -> Dict[str, int]:
+        """Net token count per dependence FIFO over the stream suffix —
+        the tokens that would remain unconsumed if the suffix ran alone."""
+        bal = {"l2c": 0, "c2l": 0, "c2s": 0, "s2c": 0}
+        for insn in self._stream[start:]:
+            q = route_queue(insn)
+            for fifo, flag in DEP_IN_EDGES[q]:
+                if getattr(insn.dep, flag):
+                    bal[fifo] -= 1
+            for fifo, flag in DEP_OUT_EDGES[q]:
+                if getattr(insn.dep, flag):
+                    bal[fifo] += 1
+        return bal
+
+    def drain_dep_tokens(self) -> None:
+        """Consume every unmatched dependence token in the four FIFOs.
+
+        Required between schedules composed into one stream: tokens are
+        information-less, so a schedule's k-th pop pairs with the k-th
+        push in FIFO order.  Stale tokens from a predecessor shift that
+        pairing one generation early and silently break the successor's
+        own WAR protocol — drain first, then compose."""
+        if any(self._pending_pop[q] for q in self._pending_pop):
+            raise RuntimeError(
+                "drain_dep_tokens called with an un-attached dep_pop pending")
+        bal = self.token_balance()
+        for _ in range(bal["c2l"]):
+            self.dep_pop(COMPUTE_Q, LOAD_Q)
+            self.noop(LOAD_Q)
+        for _ in range(bal["c2s"]):
+            self.dep_pop(COMPUTE_Q, STORE_Q)
+            self.noop(STORE_Q)
+        for _ in range(bal["l2c"]):
+            self.dep_pop(LOAD_Q, COMPUTE_Q)
+            self.noop(COMPUTE_Q)
+        for _ in range(bal["s2c"]):
+            self.dep_pop(STORE_Q, COMPUTE_Q)
+            self.noop(COMPUTE_Q)
+
+    def join_barrier(self) -> None:
+        """Full cross-module rendezvous: every instruction emitted after
+        the barrier starts only after every instruction before it has
+        completed, on all three modules.
+
+        Construction (compute is the hub — the only module with edges to
+        and from both others): drain stale tokens so the FIFOs are empty,
+        then  load-noop ─l2c→ ┐
+              store-noop─s2c→ ┼→ compute-join ─c2l→ load-noop
+                              └────────────────c2s→ store-noop
+        FIFO order serializes each module's later instructions behind its
+        resume noop, hence behind the join, hence behind everything."""
+        if not self._stream:
+            return
+        self.drain_dep_tokens()
+        self.noop(LOAD_Q)
+        self.dep_push(LOAD_Q, COMPUTE_Q)
+        self.noop(STORE_Q)
+        self.dep_push(STORE_Q, COMPUTE_Q)
+        self.dep_pop(LOAD_Q, COMPUTE_Q)
+        self.dep_pop(STORE_Q, COMPUTE_Q)
+        self.noop(COMPUTE_Q)
+        self.dep_push(COMPUTE_Q, LOAD_Q)
+        self.dep_push(COMPUTE_Q, STORE_Q)
+        self.dep_pop(COMPUTE_Q, LOAD_Q)
+        self.noop(LOAD_Q)
+        self.dep_pop(COMPUTE_Q, STORE_Q)
+        self.noop(STORE_Q)
+
     # ------------------------------------------------------------------
     # DMA instruction generation
     # ------------------------------------------------------------------
@@ -286,37 +375,55 @@ class Runtime:
     # ------------------------------------------------------------------
     def validate_stream(self, require_net_zero: bool = False,
                         start: int = 0) -> None:
-        """Check token balance per dependence FIFO (a net-negative prefix
-        means guaranteed deadlock).  With require_net_zero, additionally
-        reject streams that leave unconsumed tokens behind — schedules that
-        close over their own WAR/RAW protocol (e.g. the vector-binop path)
-        must end with every FIFO drained.  `start` restricts the check to
-        the stream suffix emitted from that index on, so a self-contained
+        """Exact static deadlock check: replay the stream the way the three
+        modules execute it — each consumes its command queue in FIFO order,
+        predicated on the four dependence-token FIFOs.  Greedy replay is
+        exact here because the modules consume from disjoint FIFO sets
+        (firing an enabled instruction can never disable another), so a
+        stuck replay == guaranteed deadlock.  Unlike the old net-balance
+        check this also rejects streams where a pop precedes its matching
+        push in module order.  With require_net_zero, additionally reject
+        streams that leave unconsumed tokens behind — schedules that close
+        over their own WAR/RAW protocol (e.g. the vector-binop path) must
+        end with every FIFO drained.  `start` restricts the check to the
+        stream suffix emitted from that index on, so a self-contained
         schedule can be validated even when composed after others."""
-        bal = {"l2c": 0, "c2l": 0, "c2s": 0, "s2c": 0}
+        queues: Dict[int, List[Insn]] = {LOAD_Q: [], COMPUTE_Q: [],
+                                         STORE_Q: []}
         for insn in self._stream[start:]:
-            q = route_queue(insn)
-            d = insn.dep
-            if q == LOAD_Q:
-                if d.pop_next: bal["c2l"] -= 1
-                if d.push_next: bal["l2c"] += 1
-            elif q == COMPUTE_Q:
-                if d.pop_prev: bal["l2c"] -= 1
-                if d.pop_next: bal["s2c"] -= 1
-                if d.push_prev: bal["c2l"] += 1
-                if d.push_next: bal["c2s"] += 1
-            else:
-                if d.pop_prev: bal["c2s"] -= 1
-                if d.push_prev: bal["s2c"] += 1
-        # (prefix analysis is conservative across modules; net balance is the
-        # cheap invariant we enforce)
-        for k, v in bal.items():
-            if v < 0:
-                raise ValueError(f"dependence FIFO {k} net balance {v} < 0: "
-                                 "more pops than pushes — stream will deadlock")
-            if require_net_zero and v != 0:
-                raise ValueError(f"dependence FIFO {k} net balance {v} != 0: "
-                                 "stream leaves unconsumed tokens")
+            queues[route_queue(insn)].append(insn)
+        tokens = {"l2c": 0, "c2l": 0, "c2s": 0, "s2c": 0}
+        pc = {LOAD_Q: 0, COMPUTE_Q: 0, STORE_Q: 0}
+        remaining = sum(len(v) for v in queues.values())
+        while remaining:
+            progressed = False
+            for q in (LOAD_Q, COMPUTE_Q, STORE_Q):
+                while pc[q] < len(queues[q]):
+                    insn = queues[q][pc[q]]
+                    needs = [fifo for fifo, flag in DEP_IN_EDGES[q]
+                             if getattr(insn.dep, flag)]
+                    if any(tokens[f] == 0 for f in needs):
+                        break
+                    for f in needs:
+                        tokens[f] -= 1
+                    for fifo, flag in DEP_OUT_EDGES[q]:
+                        if getattr(insn.dep, flag):
+                            tokens[fifo] += 1
+                    pc[q] += 1
+                    remaining -= 1
+                    progressed = True
+            if not progressed:
+                state = {_MODULE_NAMES[q]: f"{pc[q]}/{len(queues[q])}"
+                         for q in pc}
+                raise ValueError(
+                    f"dependence deadlock: no module can issue; pcs={state} "
+                    f"tokens={tokens} — a pop precedes its matching push")
+        if require_net_zero:
+            for k, v in tokens.items():
+                if v != 0:
+                    raise ValueError(
+                        f"dependence FIFO {k} balance {v} != 0: "
+                        "stream leaves unconsumed tokens")
 
     def finalize_stream(self) -> np.ndarray:
         """Append FINISH, validate token balance, and encode the stream to

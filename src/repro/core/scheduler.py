@@ -145,17 +145,53 @@ class Epilogue:
 
 
 # ----------------------------------------------------------------------
+# SRAM partitions (program-level memory scopes)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class SramPartition:
+    """A contiguous region of each data scratchpad assigned to one lowered
+    op.  Lowering passes confine all their SRAM addressing to the
+    partition, so the program compiler can keep ops with disjoint
+    partitions in flight simultaneously in one stream.  The uop cache is
+    exempt: uop loads share the compute queue with their consumers, so
+    FIFO order already serializes them (§3.2)."""
+    inp_base: int
+    inp_depth: int
+    wgt_base: int
+    wgt_depth: int
+    acc_base: int
+    acc_depth: int
+
+    @classmethod
+    def full(cls, spec: HardwareSpec) -> "SramPartition":
+        return cls(0, spec.inp_depth, 0, spec.wgt_depth, 0, spec.acc_depth)
+
+    def overlaps(self, other: "SramPartition") -> bool:
+        def hit(a0, an, b0, bn):
+            return a0 < b0 + bn and b0 < a0 + an
+        return (hit(self.inp_base, self.inp_depth,
+                    other.inp_base, other.inp_depth)
+                or hit(self.wgt_base, self.wgt_depth,
+                       other.wgt_base, other.wgt_depth)
+                or hit(self.acc_base, self.acc_depth,
+                       other.acc_base, other.acc_depth))
+
+
+# ----------------------------------------------------------------------
 # tile-size selection (memory-scope capacity budgeting, §4.1)
 # ----------------------------------------------------------------------
 def choose_matmul_tiles(Mb: int, Nb: int, Kb: int, spec: HardwareSpec,
                         virtual_threads: int,
-                        bias: bool = False) -> Tuple[int, int, int]:
+                        bias: bool = False,
+                        sram: Optional[SramPartition] = None
+                        ) -> Tuple[int, int, int]:
     """Pick (mt, nt, kt) block-tile sizes so each virtual-thread context
     fits its SRAM partition.  Greedy: grow kt (reduction reuse), then nt,
     then mt."""
-    inp_cap = spec.inp_depth // virtual_threads
-    wgt_cap = spec.wgt_depth // virtual_threads
-    acc_cap = spec.acc_depth // virtual_threads
+    sram = sram or SramPartition.full(spec)
+    inp_cap = sram.inp_depth // virtual_threads
+    wgt_cap = sram.wgt_depth // virtual_threads
+    acc_cap = sram.acc_depth // virtual_threads
     if bias:
         acc_cap //= 2  # bias tile staged in the second half of the context
 
@@ -201,11 +237,199 @@ class MatmulPlan:
     bias_addr: int = -1
 
 
+def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
+                 Mb: int, Nb: int, Kb: int,
+                 epilogue: Optional[Epilogue] = None, bias_base: int = -1,
+                 virtual_threads: int = 2,
+                 sram: Optional[SramPartition] = None,
+                 transposed: bool = False,
+                 a_stride: Optional[int] = None,
+                 c_stride: Optional[int] = None) -> Tuple[int, int, int]:
+    """Emit the blocked-matmul schedule into rt's open stream.
+
+    This is the lowering pass behind ``schedule_matmul``: it takes
+    *element* addresses of already-staged DRAM buffers, so the emitted
+    stream is data-independent — rebinding the buffers with new bytes and
+    re-running the same encoded stream recomputes the result (the program
+    JIT-cache contract).  All SRAM addressing stays inside ``sram``.
+
+    Normal mode addresses A row-major — elem (mb, kb) at
+    ``a_base + mb*a_stride + kb`` (a_stride defaults to Kb) — and writes C
+    row-major at ``c_base + mb*c_stride + nb``.  ``transposed=True``
+    consumes A stored K-major — elem (kb, m) at ``a_base + kb*a_stride +
+    m`` — and writes C N-major at ``c_base + nb*c_stride + m`` (strides
+    default to Mb).  That is exactly the 1x1-conv fast path: a blocked
+    NCHW activation plane *is* a K-major matrix over (channel-block,
+    pixel), and the N-major output *is* the blocked NCHW result.
+    Requires spec.batch == 1 (pixel rows are not batch-blocked).
+
+    Returns the chosen (mt, nt, kt) tile sizes.
+    """
+    spec = rt.spec
+    ep = epilogue or Epilogue()
+    has_bias = ep.bias_blocked is not None
+    if has_bias != (bias_base >= 0):
+        raise ValueError("epilogue.bias_blocked and bias_base must agree")
+    if transposed and spec.batch != 1:
+        raise ValueError("transposed matmul lowering requires batch == 1")
+    sram = sram or SramPartition.full(spec)
+    if a_stride is None:
+        a_stride = Mb if transposed else Kb
+    if c_stride is None:
+        c_stride = Mb if transposed else Nb
+    b_base = bias_base
+
+    mt, nt, kt = choose_matmul_tiles(Mb, Nb, Kb, spec, virtual_threads,
+                                     bias=has_bias, sram=sram)
+    vt = virtual_threads
+    inp_ctx = sram.inp_depth // vt
+    wgt_ctx = sram.wgt_depth // vt
+    acc_ctx = sram.acc_depth // vt
+    deps = [_ThreadDeps() for _ in range(vt)]
+
+    n_m, n_n, n_k = _ceil_div(Mb, mt), _ceil_div(Nb, nt), _ceil_div(Kb, kt)
+    tp = "T" if transposed else ""
+
+    # JIT one GEMM micro-kernel per (tile-shape, context); LRU-cached.
+    def gemm_kernel(mtt, ntt, ktt, acc_base, inp_base, wgt_base) -> UopKernel:
+        def build(b: UopBuilder):
+            if transposed:
+                # SRAM holds the A tile K-major (k*mtt + m); acc is N-major
+                b.loop_begin(mtt, dst_factor=1, src_factor=1, wgt_factor=0)
+                b.loop_begin(ntt, dst_factor=mtt, src_factor=0,
+                             wgt_factor=ktt)
+                for k in range(ktt):
+                    b.push(dst=acc_base, src=inp_base + k * mtt,
+                           wgt=wgt_base + k)
+            else:
+                b.loop_begin(mtt, dst_factor=ntt, src_factor=ktt,
+                             wgt_factor=0)
+                b.loop_begin(ntt, dst_factor=1, src_factor=0, wgt_factor=ktt)
+                for k in range(ktt):
+                    b.push(dst=acc_base, src=inp_base + k, wgt=wgt_base + k)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(build,
+                             key=f"mm{tp}.{mtt}.{ntt}.{ktt}.{acc_base}.{inp_base}.{wgt_base}")
+
+    def reset_kernel(mtt, ntt, acc_base) -> UopKernel:
+        dfo, dfi = (1, mtt) if transposed else (ntt, 1)
+
+        def build(b: UopBuilder):
+            b.loop_begin(mtt, dst_factor=dfo, src_factor=0)
+            b.loop_begin(ntt, dst_factor=dfi, src_factor=0)
+            b.push(dst=acc_base, src=0)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(build, key=f"rst{tp}.{mtt}.{ntt}.{acc_base}")
+
+    def alu_tile_kernel(mtt, ntt, acc_base, src_base, src_fo, src_fi, tag) -> UopKernel:
+        dfo, dfi = (1, mtt) if transposed else (ntt, 1)
+
+        def build(b: UopBuilder):
+            b.loop_begin(mtt, dst_factor=dfo, src_factor=src_fo)
+            b.loop_begin(ntt, dst_factor=dfi, src_factor=src_fi)
+            b.push(dst=acc_base, src=src_base)
+            b.loop_end(); b.loop_end()
+        return rt.uop_kernel(build,
+                             key=f"alu{tp}.{tag}.{mtt}.{ntt}.{acc_base}.{src_base}.{src_fo}.{src_fi}")
+
+    def tile_program(i: int, j: int, t: int):
+        """Phase generator for one macro tile executed on virtual thread t.
+        Yields once per (load group | compute group | store) phase so the
+        driver can interleave threads at *phase granularity* — required for
+        the information-less token pairing to be safe (Fig. 14)."""
+        d = deps[t]
+        mtt = min(mt, Mb - i * mt)
+        ntt = min(nt, Nb - j * nt)
+        acc_base = sram.acc_base + t * acc_ctx
+        # bias tile staged in the second half of the acc context
+        bias_sram = sram.acc_base + t * acc_ctx + mt * nt
+        inp_base0 = sram.inp_base + t * inp_ctx
+        wgt_base0 = sram.wgt_base + t * wgt_ctx
+        # self-epilogue source factors must track the dst grid layout
+        self_fo, self_fi = (1, mtt) if transposed else (ntt, 1)
+
+        first_compute_of_tile = True
+        for kk in range(n_k):
+            ktt = min(kt, Kb - kk * kt)
+            # ---- load group ----
+            d.begin_load_group(rt)
+            if transposed:
+                rt.load_buffer_2d(MemId.INP, inp_base0,
+                                  a_base + (kk * kt) * a_stride + i * mt,
+                                  y_size=ktt, x_size=mtt, x_stride=a_stride)
+            else:
+                rt.load_buffer_2d(MemId.INP, inp_base0,
+                                  a_base + (i * mt) * a_stride + kk * kt,
+                                  y_size=mtt, x_size=ktt, x_stride=a_stride)
+            rt.load_buffer_2d(MemId.WGT, wgt_base0,
+                              w_base + (j * nt) * Kb + kk * kt,
+                              y_size=ntt, x_size=ktt, x_stride=Kb)
+            d.end_load_group(rt)
+            yield
+            # ---- compute group ----
+            d.begin_compute_group(rt, pops_acc=first_compute_of_tile)
+            if first_compute_of_tile:
+                rt.push_gemm(reset_kernel(mtt, ntt, acc_base), reset=True)
+                if has_bias:
+                    rt.load_buffer_2d(MemId.ACC, bias_sram,
+                                      b_base + j * nt,
+                                      y_size=1, x_size=ntt, x_stride=Nb)
+                first_compute_of_tile = False
+            rt.push_gemm(gemm_kernel(mtt, ntt, ktt, acc_base,
+                                     inp_base0, wgt_base0))
+            d.end_compute_group_frees_loads(rt)
+            yield
+
+        # ---- epilogue on the tensor ALU ----
+        if has_bias:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, bias_sram,
+                                        0, 1, "bias"),
+                        op=AluOp.ADD, use_imm=False)
+        if ep.shift:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        self_fo, self_fi, "self"),
+                        op=AluOp.SHR, imm=ep.shift)
+        clip_lo = ep.folded_clip_lo
+        if ep.relu and clip_lo is None:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        self_fo, self_fi, "self"),
+                        op=AluOp.MAX, imm=0)
+        if clip_lo is not None:
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        self_fo, self_fi, "self"),
+                        op=AluOp.MAX, imm=clip_lo)
+            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
+                                        self_fo, self_fi, "self"),
+                        op=AluOp.MIN, imm=ep.clip_hi)
+        # ---- store ----
+        d.compute_to_store(rt)
+        d.begin_store(rt)
+        if transposed:
+            rt.store_buffer_2d(acc_base,
+                               c_base + (j * nt) * c_stride + i * mt,
+                               y_size=ntt, x_size=mtt, x_stride=c_stride)
+        else:
+            rt.store_buffer_2d(acc_base,
+                               c_base + (i * mt) * c_stride + j * nt,
+                               y_size=mtt, x_size=ntt, x_stride=c_stride)
+        d.end_store(rt)
+        yield
+
+    tiles = [(i, j) for i in range(n_m) for j in range(n_n)]
+    interleave_virtual_threads(
+        tiles, vt, lambda coord, t: tile_program(coord[0], coord[1], t))
+    return mt, nt, kt
+
+
 def schedule_matmul(rt: Runtime, a: np.ndarray, w: np.ndarray,
                     epilogue: Optional[Epilogue] = None,
-                    virtual_threads: int = 2) -> MatmulPlan:
+                    virtual_threads: int = 2,
+                    sram: Optional[SramPartition] = None) -> MatmulPlan:
     """Lower C = A @ W^T (+epilogue) onto VTA.  Returns the plan whose
-    c_addr holds the blocked int8 result after rt.synchronize()."""
+    c_addr holds the blocked int8 result after rt.synchronize().
+
+    Thin wrapper over ``lower_matmul``: stages the operands in DRAM and
+    delegates the stream emission to the lowering pass."""
     spec = rt.spec
     ep = epilogue or Epilogue()
     M, K = a.shape
@@ -226,124 +450,17 @@ def schedule_matmul(rt: Runtime, a: np.ndarray, w: np.ndarray,
             np.ascontiguousarray(ep.bias_blocked, dtype=np.int32),
             align=spec.acc_elem_bytes)
 
-    mt, nt, kt = choose_matmul_tiles(Mb, Nb, Kb, spec, virtual_threads,
-                                     bias=ep.bias_blocked is not None)
-    vt = virtual_threads
-    inp_ctx = spec.inp_depth // vt
-    wgt_ctx = spec.wgt_depth // vt
-    acc_ctx = spec.acc_depth // vt
-    deps = [_ThreadDeps() for _ in range(vt)]
+    tiles = lower_matmul(
+        rt,
+        a_base=rt.to_elem_addr(a_addr, MemId.INP),
+        w_base=rt.to_elem_addr(w_addr, MemId.WGT),
+        c_base=rt.to_elem_addr(c_addr, MemId.OUT),
+        Mb=Mb, Nb=Nb, Kb=Kb, epilogue=ep,
+        bias_base=(rt.to_elem_addr(bias_addr, MemId.ACC)
+                   if bias_addr >= 0 else -1),
+        virtual_threads=virtual_threads, sram=sram)
 
-    a_base = rt.to_elem_addr(a_addr, MemId.INP)
-    w_base = rt.to_elem_addr(w_addr, MemId.WGT)
-    c_base = rt.to_elem_addr(c_addr, MemId.OUT)
-    b_base = rt.to_elem_addr(bias_addr, MemId.ACC) if bias_addr >= 0 else -1
-
-    n_m, n_n, n_k = _ceil_div(Mb, mt), _ceil_div(Nb, nt), _ceil_div(Kb, kt)
-
-    # JIT one GEMM micro-kernel per (tile-shape, context); LRU-cached.
-    def gemm_kernel(mtt, ntt, ktt, acc_base, inp_base, wgt_base) -> UopKernel:
-        def build(b: UopBuilder):
-            b.loop_begin(mtt, dst_factor=ntt, src_factor=ktt, wgt_factor=0)
-            b.loop_begin(ntt, dst_factor=1, src_factor=0, wgt_factor=ktt)
-            for k in range(ktt):
-                b.push(dst=acc_base, src=inp_base + k, wgt=wgt_base + k)
-            b.loop_end(); b.loop_end()
-        return rt.uop_kernel(build,
-                             key=f"mm.{mtt}.{ntt}.{ktt}.{acc_base}.{inp_base}.{wgt_base}")
-
-    def reset_kernel(mtt, ntt, acc_base) -> UopKernel:
-        def build(b: UopBuilder):
-            b.loop_begin(mtt, dst_factor=ntt, src_factor=0)
-            b.loop_begin(ntt, dst_factor=1, src_factor=0)
-            b.push(dst=acc_base, src=0)
-            b.loop_end(); b.loop_end()
-        return rt.uop_kernel(build, key=f"rst.{mtt}.{ntt}.{acc_base}")
-
-    def alu_tile_kernel(mtt, ntt, acc_base, src_base, src_fo, src_fi, tag) -> UopKernel:
-        def build(b: UopBuilder):
-            b.loop_begin(mtt, dst_factor=ntt, src_factor=src_fo)
-            b.loop_begin(ntt, dst_factor=1, src_factor=src_fi)
-            b.push(dst=acc_base, src=src_base)
-            b.loop_end(); b.loop_end()
-        return rt.uop_kernel(build,
-                             key=f"alu.{tag}.{mtt}.{ntt}.{acc_base}.{src_base}.{src_fo}.{src_fi}")
-
-    def tile_program(i: int, j: int, t: int):
-        """Phase generator for one macro tile executed on virtual thread t.
-        Yields once per (load group | compute group | store) phase so the
-        driver can interleave threads at *phase granularity* — required for
-        the information-less token pairing to be safe (Fig. 14)."""
-        d = deps[t]
-        mtt = min(mt, Mb - i * mt)
-        ntt = min(nt, Nb - j * nt)
-        acc_base = t * acc_ctx
-        bias_sram = t * acc_ctx + mt * nt  # second half of the acc context
-        inp_base0 = t * inp_ctx
-        wgt_base0 = t * wgt_ctx
-
-        first_compute_of_tile = True
-        for kk in range(n_k):
-            ktt = min(kt, Kb - kk * kt)
-            # ---- load group ----
-            d.begin_load_group(rt)
-            rt.load_buffer_2d(MemId.INP, inp_base0,
-                              a_base + (i * mt) * Kb + kk * kt,
-                              y_size=mtt, x_size=ktt, x_stride=Kb)
-            rt.load_buffer_2d(MemId.WGT, wgt_base0,
-                              w_base + (j * nt) * Kb + kk * kt,
-                              y_size=ntt, x_size=ktt, x_stride=Kb)
-            d.end_load_group(rt)
-            yield
-            # ---- compute group ----
-            d.begin_compute_group(rt, pops_acc=first_compute_of_tile)
-            if first_compute_of_tile:
-                rt.push_gemm(reset_kernel(mtt, ntt, acc_base), reset=True)
-                if ep.bias_blocked is not None:
-                    # stage bias into the spare half of the acc context
-                    rt.load_buffer_2d(MemId.ACC, bias_sram,
-                                      b_base + j * nt,
-                                      y_size=1, x_size=ntt, x_stride=Nb)
-                first_compute_of_tile = False
-            rt.push_gemm(gemm_kernel(mtt, ntt, ktt, acc_base,
-                                     inp_base0, wgt_base0))
-            d.end_compute_group_frees_loads(rt)
-            yield
-
-        # ---- epilogue on the tensor ALU ----
-        if ep.bias_blocked is not None:
-            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, bias_sram,
-                                        0, 1, "bias"),
-                        op=AluOp.ADD, use_imm=False)
-        if ep.shift:
-            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
-                                        ntt, 1, "self"),
-                        op=AluOp.SHR, imm=ep.shift)
-        clip_lo = ep.folded_clip_lo
-        if ep.relu and clip_lo is None:
-            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
-                                        ntt, 1, "self"),
-                        op=AluOp.MAX, imm=0)
-        if clip_lo is not None:
-            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
-                                        ntt, 1, "self"),
-                        op=AluOp.MAX, imm=clip_lo)
-            rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
-                                        ntt, 1, "self"),
-                        op=AluOp.MIN, imm=ep.clip_hi)
-        # ---- store ----
-        d.compute_to_store(rt)
-        d.begin_store(rt)
-        rt.store_buffer_2d(acc_base, c_base + (i * mt) * Nb + j * nt,
-                           y_size=mtt, x_size=ntt, x_stride=Nb)
-        d.end_store(rt)
-        yield
-
-    tiles = [(i, j) for i in range(n_m) for j in range(n_n)]
-    interleave_virtual_threads(
-        tiles, vt, lambda coord, t: tile_program(coord[0], coord[1], t))
-
-    return MatmulPlan(M=M, N=N, K=K, Mb=Mb, Nb=Nb, Kb=Kb, tiles=(mt, nt, kt),
+    return MatmulPlan(M=M, N=N, K=K, Mb=Mb, Nb=Nb, Kb=Kb, tiles=tiles,
                       a_addr=a_addr, w_addr=w_addr, c_addr=c_addr,
                       bias_addr=bias_addr)
 
@@ -382,15 +499,56 @@ def matmul_reference(a: np.ndarray, w: np.ndarray,
 # ----------------------------------------------------------------------
 # elementwise vector ops (the Listing-1 vector-add path)
 # ----------------------------------------------------------------------
-def schedule_vector_binop(rt: Runtime, a: np.ndarray, b: np.ndarray,
-                          op: AluOp = AluOp.ADD) -> Tuple[int, Tuple[int, ...]]:
-    """C = a (op) b over int32 vectors via the tensor ALU (Listing 1).
+def lower_vector_binop(rt: Runtime, *, a_base: int, b_base: int, c_base: int,
+                       ne: int, op: AluOp = AluOp.ADD,
+                       sram: Optional[SramPartition] = None) -> None:
+    """Emit the chunked vector-ALU schedule (element addresses, like
+    ``lower_matmul``).  Emits a self-synchronized protocol for *its own*
+    SRAM traffic only; the program compiler inserts the cross-op tokens
+    when composing it with other lowered ops in one stream."""
+    spec = rt.spec
+    sram = sram or SramPartition.full(spec)
+    cap = sram.acc_depth // 2
+    if cap < 1:
+        raise ValueError(f"acc partition depth {sram.acc_depth} cannot "
+                         "double-buffer even one vector element")
+    acc0 = sram.acc_base
+    stream_start = len(rt.stream)   # validate only this schedule's suffix
+    done = 0
+    while done < ne:
+        cur = min(cap, ne - done)
+        # both operands staged via the compute module's ACC-load path
+        rt.load_buffer_2d(MemId.ACC, acc0, a_base + done,
+                          y_size=1, x_size=cur, x_stride=cur)
+        rt.load_buffer_2d(MemId.ACC, acc0 + cap, b_base + done,
+                          y_size=1, x_size=cur, x_stride=cur)
 
-    Like every schedule_* entry point, this emits a self-synchronized
-    protocol for *its own* SRAM traffic only; schedules composed into one
-    stream race on shared scratchpad regions (no cross-schedule WAR
-    tokens), so synchronize between ops that share SRAM — the paper's
-    per-op VTASynchronize pattern."""
+        def build(bu: UopBuilder, cur=cur):
+            bu.loop_begin(cur, dst_factor=1, src_factor=1)
+            bu.push(dst=acc0, src=acc0 + cap)
+            bu.loop_end()
+        rt.push_alu(rt.uop_kernel(build, key=f"vec.{op}.{cur}.{acc0}.{cap}"),
+                    op=op, use_imm=False)
+        rt.dep_push(COMPUTE_Q, STORE_Q)
+        rt.dep_pop(COMPUTE_Q, STORE_Q)
+        rt.store_buffer_2d(acc0, c_base + done,
+                           y_size=1, x_size=cur, x_stride=cur)
+        done += cur
+        if done < ne:
+            # WAR: the next chunk's ACC loads overwrite rows this store is
+            # still draining.  Only emitted when another chunk follows, so
+            # the stream ends with every dependence FIFO at net zero.
+            rt.dep_push(STORE_Q, COMPUTE_Q)
+            rt.dep_pop(STORE_Q, COMPUTE_Q)
+    rt.validate_stream(require_net_zero=True, start=stream_start)
+
+
+def schedule_vector_binop(rt: Runtime, a: np.ndarray, b: np.ndarray,
+                          op: AluOp = AluOp.ADD,
+                          sram: Optional[SramPartition] = None
+                          ) -> Tuple[int, Tuple[int, ...]]:
+    """C = a (op) b over int32 vectors via the tensor ALU (Listing 1).
+    Thin wrapper over ``lower_vector_binop``."""
     spec = rt.spec
     lane = spec.batch * spec.block_out
     a = np.asarray(a, np.int32).ravel()
@@ -404,36 +562,11 @@ def schedule_vector_binop(rt: Runtime, a: np.ndarray, b: np.ndarray,
     a_addr = rt.copy_to_device(ab, align=spec.acc_elem_bytes)
     b_addr = rt.copy_to_device(bb, align=spec.acc_elem_bytes)
     c_addr = rt.buffer_alloc(ne * spec.out_elem_bytes, align=spec.out_elem_bytes)
-
-    cap = spec.acc_depth // 2
-    stream_start = len(rt.stream)   # validate only this schedule's suffix
-    done = 0
-    while done < ne:
-        cur = min(cap, ne - done)
-        # both operands staged via the compute module's ACC-load path
-        rt.load_buffer_2d(MemId.ACC, 0, rt.to_elem_addr(a_addr, MemId.ACC) + done,
-                          y_size=1, x_size=cur, x_stride=cur)
-        rt.load_buffer_2d(MemId.ACC, cap, rt.to_elem_addr(b_addr, MemId.ACC) + done,
-                          y_size=1, x_size=cur, x_stride=cur)
-
-        def build(bu: UopBuilder, cur=cur):
-            bu.loop_begin(cur, dst_factor=1, src_factor=1)
-            bu.push(dst=0, src=cap)
-            bu.loop_end()
-        rt.push_alu(rt.uop_kernel(build, key=f"vec.{op}.{cur}.{cap}"),
-                    op=op, use_imm=False)
-        rt.dep_push(COMPUTE_Q, STORE_Q)
-        rt.dep_pop(COMPUTE_Q, STORE_Q)
-        rt.store_buffer_2d(0, rt.to_elem_addr(c_addr, MemId.OUT) + done,
-                           y_size=1, x_size=cur, x_stride=cur)
-        done += cur
-        if done < ne:
-            # WAR: the next chunk's ACC loads overwrite rows this store is
-            # still draining.  Only emitted when another chunk follows, so
-            # the stream ends with every dependence FIFO at net zero.
-            rt.dep_push(STORE_Q, COMPUTE_Q)
-            rt.dep_pop(STORE_Q, COMPUTE_Q)
-    rt.validate_stream(require_net_zero=True, start=stream_start)
+    lower_vector_binop(rt,
+                       a_base=rt.to_elem_addr(a_addr, MemId.ACC),
+                       b_base=rt.to_elem_addr(b_addr, MemId.ACC),
+                       c_base=rt.to_elem_addr(c_addr, MemId.OUT),
+                       ne=ne, op=op, sram=sram)
     return c_addr, (ne, spec.batch, spec.block_out)
 
 

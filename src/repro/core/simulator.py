@@ -57,6 +57,8 @@ class TimingModel:
                 MemId.OUT: spec.out_elem_bytes,
             }[insn.memory_type]
             nbytes = insn.y_size * insn.x_size * elem
+            if nbytes == 0:
+                return 1  # barrier noop: no DMA setup cost
             return self._dma_cycles(nbytes, write=insn.opcode == Opcode.STORE)
         if isinstance(insn, GemmInsn):
             # one tensor-tensor matrix multiply per cycle (Fig. 7)

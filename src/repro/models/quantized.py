@@ -5,13 +5,25 @@ Every >=2-D linear weight inside layer blocks becomes {w_q: int8,
 w_scale: f32 per-output-channel}; embeddings, norms and the LM head stay
 float (standard practice, and faithful to VTA: the first conv layer also
 stayed on the CPU in the paper's evaluation).
+
+:class:`VtaLinear` routes a quantized linear layer through the
+program-level JIT (``repro.core.Program``): the layer compiles once into a
+task-ISA stream and every subsequent call just rebinds the activation
+buffer and re-runs it on either execution backend — the deployment path
+that actually exercises the VTA datapath instead of the XLA GEMM.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hwspec as _hwspec
+from repro.core import quantize as q
+from repro.core.program import CompiledProgram, Program
+from repro.core.scheduler import Epilogue
 
 from .layers import quantize_linear_params
 
@@ -50,3 +62,81 @@ def quantized_param_shapes(param_shapes: Params) -> Params:
         return jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), shape_tree)
     return jax.eval_shape(lambda p: quantize_params(p), param_shapes)
+
+
+# ----------------------------------------------------------------------
+# linear layers through the program-level JIT
+# ----------------------------------------------------------------------
+class VtaLinear:
+    """A dense layer y = x @ W executed on the VTA datapath via a compiled
+    ``Program``.
+
+    Integer-only deployment (§5): weights are re-quantized per-tensor
+    (power-of-two requant shifts need one scale), activations are
+    dynamically quantized per call, and the int8 GEMM + shift/clip
+    epilogue runs as a task-ISA stream on either execution backend.  One
+    program is compiled per (batch rows, requant shift) signature and
+    cached; subsequent calls only rebind DRAM buffers.
+    """
+
+    def __init__(self, w: np.ndarray, spec=None, backend: Any = None,
+                 virtual_threads: int = 2):
+        w = np.asarray(w, np.float32)          # (d_in, d_out)
+        if w.ndim != 2:
+            raise ValueError(f"expected a 2-D weight, got {w.shape}")
+        self.d_in, self.d_out = w.shape
+        self.spec = spec or _hwspec.pynq()
+        self.backend = backend
+        self.virtual_threads = virtual_threads
+        self.qw = q.calibrate(w)
+        self.w_q = q.quantize(w, self.qw).T.copy()   # (N=d_out, K=d_in)
+        self._w_float = w
+        self._qy: Optional[q.QuantParams] = None
+        self._programs: Dict[Tuple[int, int], CompiledProgram] = {}
+
+    @classmethod
+    def from_params(cls, p: Params, **kw) -> "VtaLinear":
+        """Build from PTQ params {w_q: (d_in, d_out) int8, w_scale: (d_out,)}
+        — the per-channel PTQ weights are reconstructed and re-quantized
+        per-tensor for the integer-only shift epilogue."""
+        w = (np.asarray(p["w_q"], np.float32)
+             * np.asarray(p["w_scale"], np.float32)[None, :])
+        return cls(w, **kw)
+
+    # ------------------------------------------------------------------
+    def _program(self, m: int, shift: int) -> CompiledProgram:
+        key = (m, shift)
+        if key not in self._programs:
+            prog = Program(self.spec, virtual_threads=self.virtual_threads)
+            x = prog.input("x", (m, self.d_in))
+            w = prog.input("w", (self.d_out, self.d_in))
+            prog.matmul(x, w, epilogue=Epilogue(shift=shift), name="y")
+            self._programs[key] = prog.compile()
+        return self._programs[key]
+
+    def __call__(self, x: np.ndarray, backend: Any = None) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        lead, d_in = x.shape[:-1], x.shape[-1]
+        if d_in != self.d_in:
+            raise ValueError(f"expected (..., {self.d_in}), got {x.shape}")
+        x2 = x.reshape(-1, d_in)
+        qx = q.calibrate(x2)
+        if self._qy is None:
+            # one-time output calibration from the float product
+            self._qy = q.calibrate(x2 @ self._w_float)
+        shift = q.choose_requant_shift(qx.scale, self.qw.scale,
+                                       self._qy.scale)
+        compiled = self._program(x2.shape[0], shift)
+        y_q = compiled(backend=backend if backend is not None
+                       else self.backend,
+                       x=q.quantize(x2, qx), w=self.w_q)
+        # exact dequant of the power-of-two requant:
+        # acc * sx*sw ~= y, y_q = clip(acc >> shift)
+        y = y_q.astype(np.float32) * (qx.scale * self.qw.scale * 2.0 ** shift)
+        return y.reshape(*lead, self.d_out).astype(np.float32)
+
+
+def vta_linear_from_params(p: Params, **kw) -> VtaLinear:
+    """Route one PTQ'd linear layer ({w_q, w_scale}, as produced by
+    quantize_params) through the program-level JIT."""
+    return VtaLinear.from_params(p, **kw)

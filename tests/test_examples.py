@@ -21,11 +21,16 @@ def test_quickstart():
     out = _run("quickstart.py")
     assert "exact int8 result ok" in out
     assert "virtual_threads=2" in out
+    assert "program JIT ok" in out
 
 
 def test_resnet18_offload():
     out = _run("resnet18_offload.py", "C12")
     assert "exact on VTA" in out
+    # the heterogeneous chain runs end to end on both engines via Program
+    assert out.count("exact end-to-end") == 2
+    assert "cpu step(s)" in out
+    assert "stream cache hit" in out
 
 
 def test_train_lm_short():
