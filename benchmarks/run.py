@@ -58,6 +58,12 @@ def main() -> None:
                     f"{prow['insns']} insns, "
                     f"x{prow['rows'][0]['speedup_x']} on sim"))
 
+    _section("General conv2d fast path: coalesced vs eager (measured C2)")
+    t0 = time.perf_counter()
+    _, conv_speedup = bench_fig16_e2e.run_measured()
+    summary.append(("conv_fast_path", (time.perf_counter() - t0) * 1e6,
+                    f"x{conv_speedup:.1f} vs pre-PR eager path"))
+
     _section("Dry-run roofline table (from experiments/dryrun)")
     t0 = time.perf_counter()
     try:

@@ -21,6 +21,7 @@ import time
 import numpy as np
 
 from repro.core import Program, hwspec, quantize as q
+from repro.core.backend import assert_fast_path
 from repro.core.conv import ConvShape, conv2d_reference, read_conv_result, \
     schedule_conv2d
 from repro.core.runtime import Runtime
@@ -109,6 +110,14 @@ def heterogeneous_chain(name: str) -> None:
         dt = time.perf_counter() - t0
         assert np.array_equal(got, ref), f"{backend} diverged!"
         print(f"  {backend}: exact end-to-end in {dt * 1e3:.0f} ms")
+        if backend == "pallas":
+            # every conv — including the kh*kw>1 body — must stay on the
+            # coalesced vta_gemm fast path (describe() shows the modes)
+            assert_fast_path(compiled.last_stats)
+            coal = sum(s.coalesced_gemm_insns for s in compiled.last_stats)
+            eager = sum(s.eager_gemm_insns for s in compiled.last_stats)
+            print(f"    fast path: {coal} GEMM insns coalesced, "
+                  f"{eager} eager fallbacks")
     # second invocation: rebinds DRAM inputs, no re-scheduling
     x2 = rng.integers(-64, 64, size=x.shape, dtype=np.int8)
     t0 = time.perf_counter()

@@ -4,7 +4,9 @@ from . import backend, compiler, conv, driver, hwspec, isa  # noqa: F401
 from . import layout, microop, pipeline_model, program  # noqa: F401
 from . import quantize, runtime, scheduler, simulator, workloads  # noqa: F401
 from .backend import (CrossBackendChecker, ExecutionBackend,  # noqa: F401
-                      PallasBackend, SimulatorBackend, resolve_backend)
+                      PallasBackend, SimulatorBackend, assert_fast_path,
+                      resolve_backend)
+from .conv import ConvShape, select_conv_lowering  # noqa: F401
 from .hwspec import HardwareSpec, pynq, pynq_batch2, tpu_like  # noqa: F401
 from .program import CompiledProgram, Program, TensorRef  # noqa: F401
 from .runtime import Runtime  # noqa: F401

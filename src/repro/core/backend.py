@@ -93,15 +93,26 @@ _OUT_EDGES = DEP_OUT_EDGES
 
 
 @dataclass
+class _GemmChunk:
+    """One coalesced GEMM instruction: the acc-element grid it wrote and a
+    snapshot of its operands.  ``grid`` may equal the owning tile's full
+    (reset) grid — the blocked-matmul case — or cover a sub-region of it,
+    which is the direct-conv structure: one instruction per output row
+    ``oh``, each accumulating kh*kw*cbt uops into its row of the tile."""
+    grid: np.ndarray                    # (iter_out, iter_in) acc element ids
+    a: np.ndarray                       # (io*batch, U*block_in) int8
+    w: np.ndarray                       # (ii*block_out, U*block_in) int8
+
+
+@dataclass
 class _PendingTile:
     """A lazily-evaluated accumulator tile: the coalesced record of one
     virtual-thread context's reset + GEMM chunks + ALU epilogue, resolved
-    with one ``vta_gemm`` Pallas call (plus fused ALU chains) when the
-    tile is stored or otherwise observed."""
-    grid: np.ndarray                    # (iter_out, iter_in) acc element ids
+    with batched ``vta_gemm`` Pallas calls (plus fused ALU chains) when
+    the tile is stored or otherwise observed."""
+    grid: np.ndarray                    # canonical (reset) grid of acc ids
     indices: np.ndarray                 # sorted unique ids (overlap queries)
-    # snapshot GEMM operands: list of (A2 (R, k) int8, W2 (C, k) int8)
-    chunks: List[Tuple[np.ndarray, np.ndarray]] = field(default_factory=list)
+    chunks: List[_GemmChunk] = field(default_factory=list)
     # epilogue: ("imm", op, imm) | ("tensor", op, (R, C) int32 matrix)
     alu_chain: List[tuple] = field(default_factory=list)
 
@@ -119,20 +130,29 @@ class PallasBackend:
 
     LOADs update numpy SRAM state eagerly (DMA semantics are reused from
     the Simulator).  GEMM/ALU instructions whose micro-coded affine index
-    pattern matches the blocked-matmul / tile-epilogue structure are
-    *coalesced* per accumulator tile and resolved by ``vta_gemm`` /
-    ``tensor_alu`` when the tile is stored; anything else falls back to
-    the simulator's eager per-instruction semantics, so arbitrary valid
-    streams still execute correctly — just without the fast path.
+    pattern matches the blocked-matmul / direct-conv / tile-epilogue
+    structure are *coalesced* per accumulator tile and resolved by
+    ``vta_gemm`` / ``tensor_alu`` when the tile is stored; anything else
+    falls back to the simulator's eager per-instruction semantics, so
+    arbitrary valid streams still execute correctly — just without the
+    fast path.  ``RunStats.coalesced_*`` / ``eager_*`` count which route
+    each compute instruction took (see :func:`assert_fast_path`).
+
+    ``coalesce_subgrids=False`` restricts coalescing to instructions whose
+    grid equals the tile's reset grid exactly (the pre-generalization
+    behavior, which sent direct-conv schedules to the eager loop) — kept
+    as an A/B switch for benchmarks and debugging.
     """
 
     name = "pallas"
 
     def __init__(self, interpret: Optional[bool] = None,
-                 check_tokens: bool = True):
+                 check_tokens: bool = True,
+                 coalesce_subgrids: bool = True):
         # interpret=None -> auto (native on TPU, interpreter elsewhere)
         self.interpret = interpret
         self.check_tokens = check_tokens
+        self.coalesce_subgrids = coalesce_subgrids
 
     # ------------------------------------------------------------------
     def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
@@ -260,6 +280,26 @@ class PallasBackend:
             return None
         return grid, S[:, 0, :], W[0, :, :]
 
+    def _find_containing(self, st: _RunState,
+                         grid: np.ndarray) -> Optional[_PendingTile]:
+        """The pending tile this GEMM accumulates into: an exact grid
+        match (blocked matmul / im2col), or — with sub-grid coalescing —
+        any tile whose reset region contains every dst id (the direct-conv
+        per-output-row structure)."""
+        tile = st.pending.get(int(grid.min()))
+        if tile is not None and tile.grid.shape == grid.shape \
+                and (tile.grid == grid).all():
+            return tile
+        if not self.coalesce_subgrids:
+            return None
+        ids = grid.ravel()
+        lo, hi = int(ids.min()), int(ids.max())
+        for t in st.pending.values():
+            if lo >= t.indices[0] and hi <= t.indices[-1] \
+                    and np.isin(ids, t.indices).all():
+                return t
+        return None
+
     # ------------------------------------------------------------------
     # GEMM
     # ------------------------------------------------------------------
@@ -274,6 +314,7 @@ class PallasBackend:
         if struct is None:
             self._materialize_indices(st, np.unique(dsts), stats)
             sim._do_gemm(insn, stats)
+            stats.eager_gemm_insns += 1
             return
         grid, src_idx, wgt_idx = struct
 
@@ -292,15 +333,14 @@ class PallasBackend:
                 grid=grid, indices=np.unique(grid))
             return
 
-        base = int(grid.min())
-        tile = st.pending.get(base)
-        if (tile is None or tile.alu_chain
-                or tile.grid.shape != grid.shape
-                or not (tile.grid == grid).all()):
-            # accumulate-onto-existing-values (or post-epilogue) GEMM:
-            # resolve lazies, then run the eager oracle semantics
+        tile = self._find_containing(st, grid)
+        if tile is None or tile.alu_chain:
+            # accumulate-onto-existing-values, post-epilogue, or
+            # partially-overlapping GEMM: resolve lazies, then run the
+            # eager oracle semantics
             self._materialize_indices(st, np.unique(dsts), stats)
             sim._do_gemm(insn, stats)
+            stats.eager_gemm_insns += 1
             return
         # snapshot operands NOW: virtual threading will overwrite these
         # SRAM contexts before the tile is stored
@@ -314,7 +354,8 @@ class PallasBackend:
         W2 = np.ascontiguousarray(
             Wm.transpose(0, 2, 1, 3).reshape(grid.shape[1] * s.block_out,
                                              U * s.block_in))
-        tile.chunks.append((A2, W2))
+        tile.chunks.append(_GemmChunk(grid=grid, a=A2, w=W2))
+        stats.coalesced_gemm_insns += 1
         stats.gemm_macs += (grid.size * U * s.batch
                             * s.block_in * s.block_out)
 
@@ -343,12 +384,14 @@ class PallasBackend:
                 if insn.use_imm:
                     tile.alu_chain.append(("imm", op, int(insn.imm)))
                     stats.alu_ops += grid.size * s.batch * s.block_out
+                    stats.coalesced_alu_insns += 1
                     return
                 # tensor-tensor: src must be readable now (eager region)
                 if not self._overlaps_pending(st, np.unique(src_grid)):
                     src_mat = self._to_matrix(sim.acc_sram[src_grid], s)
                     tile.alu_chain.append(("tensor", op, src_mat))
                     stats.alu_ops += grid.size * s.batch * s.block_out
+                    stats.coalesced_alu_insns += 1
                     return
             # vector-ALU fast path: a dense single-uop op over the *eager*
             # region (no pending lazy tile) — e.g. the chunked
@@ -366,6 +409,7 @@ class PallasBackend:
                          else np.concatenate([dsts, srcs]))
         self._materialize_indices(st, need, stats)
         sim._do_alu(insn, stats)
+        stats.eager_alu_insns += 1
 
     def _alu_eager_region(self, st: _RunState, insn: AluInsn,
                           grid: np.ndarray, src_grid: np.ndarray,
@@ -395,6 +439,7 @@ class PallasBackend:
         touched = np.unique(grid)
         sim.out_sram[touched] = sim.acc_sram[touched].astype(np.int8)
         stats.alu_ops += grid.size * s.batch * s.block_out
+        stats.coalesced_alu_insns += 1
 
     # ------------------------------------------------------------------
     # tile resolution through the Pallas kernels
@@ -421,7 +466,7 @@ class PallasBackend:
         io, ii = tile.grid.shape
         R, C = io * s.batch, ii * s.block_out
         if tile.chunks:
-            acc = self._resolve_tile(tile, R, C)
+            acc = self._resolve_tile(tile, R, C, s)
         elif tile.alu_chain:
             acc = self._alu_chain(np.zeros((R, C), np.int32), tile.alu_chain)
         else:
@@ -444,45 +489,120 @@ class PallasBackend:
             return shift
         return None
 
-    def _resolve_tile(self, tile: _PendingTile, R: int, C: int) -> np.ndarray:
-        """One Pallas pipeline per tile: the concatenated-K GEMM, with the
-        ALU chain either fused into the kernel's requant epilogue (the
-        canonical shift+clip case) or chained on-device; a single host
-        transfer at the end."""
+    def _resolve_tile(self, tile: _PendingTile, R: int, C: int,
+                      spec: HardwareSpec) -> np.ndarray:
+        """Resolve a tile's recorded GEMM chunks through batched
+        ``vta_gemm`` calls.
+
+        Chunks that accumulated onto the *same* grid (the reduction loop)
+        concatenate along K; grids that multiplied the *same* weight tile
+        — the direct-conv structure, one instruction per output row —
+        stack along the row axis, so the whole tile resolves in one Pallas
+        call per distinct weight tile (one call total for both the matmul
+        and the direct-conv schedules).  The ALU chain fuses into the
+        kernel's requant epilogue in the canonical shift+clip case
+        (elementwise, hence legal exactly when the chunk grids are
+        pairwise disjoint — each element's full reduction then lives in
+        one kernel call); otherwise it is applied to the assembled tile
+        with ``tensor_alu`` passes."""
         import jax.numpy as jnp
 
         from ..kernels._compat import resolve_interpret
         from ..kernels.vta_gemm.kernel import vta_gemm_pallas
         interpret = resolve_interpret(self.interpret)
 
-        A = np.concatenate([a for a, _ in tile.chunks], axis=1)
-        W2 = np.concatenate([w for _, w in tile.chunks], axis=1)
-        K = A.shape[1]
-        bm = bn = bk = 128
-        Rp, Cp, Kp = -(-R // bm) * bm, -(-C // bn) * bn, -(-K // bk) * bk
-        Ap = np.zeros((Rp, Kp), np.int8)
-        Ap[:R, :K] = A
-        Wp = np.zeros((Kp, Cp), np.int8)
-        Wp[:K, :C] = W2.T
+        # 1. concatenate same-grid chunks along K (reduction accumulation)
+        merged: List[Tuple[np.ndarray, List[np.ndarray], List[np.ndarray]]] \
+            = []
+        index: Dict[tuple, int] = {}
+        for c in tile.chunks:
+            key = (c.grid.shape, c.grid.tobytes())
+            if key in index:
+                _, As, Ws = merged[index[key]]
+                As.append(c.a)
+                Ws.append(c.w)
+            else:
+                index[key] = len(merged)
+                merged.append((c.grid, [c.a], [c.w]))
+        groups = [(g, np.concatenate(As, axis=1), np.concatenate(Ws, axis=1))
+                  for g, As, Ws in merged]
 
-        shift = self._requant_shift(tile.alu_chain)
-        if shift is not None:
-            out = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
-                                  epilogue="requant", shift=shift,
-                                  interpret=interpret)
-            return np.asarray(out)[:R, :C].astype(np.int32)
-        acc = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
-                              interpret=interpret)
-        if tile.alu_chain:
-            # padded rows/cols carry garbage through the chain; sliced off
-            acc = self._alu_chain(acc, tile.alu_chain, pad_to=(Rp, Cp))
-        return np.asarray(acc)[:R, :C]
+        n_ids = sum(g.size for g, _, _ in groups)
+        disjoint = np.unique(
+            np.concatenate([g.ravel() for g, _, _ in groups])).size == n_ids
+        shift = self._requant_shift(tile.alu_chain) if disjoint else None
 
-    def _alu_chain(self, acc, chain: Sequence[tuple],
-                   pad_to: Optional[Tuple[int, int]] = None) -> "np.ndarray":
+        # 2. row-stack groups sharing one weight tile -> batched GEMM
+        wgroups: List[Tuple[np.ndarray,
+                            List[Tuple[np.ndarray, np.ndarray]]]] = []
+        windex: Dict[tuple, int] = {}
+        for g, A, W in groups:
+            key = (W.shape, W.tobytes())
+            if key in windex:
+                wgroups[windex[key]][1].append((g, A))
+            else:
+                windex[key] = len(wgroups)
+                wgroups.append((W, [(g, A)]))
+
+        results: List[Tuple[np.ndarray, np.ndarray]] = []
+        for W, parts in wgroups:
+            A_all = parts[0][1] if len(parts) == 1 else \
+                np.concatenate([A for _, A in parts], axis=0)
+            Rg, K = A_all.shape
+            Cg = W.shape[0]
+            bm = bn = bk = 128
+            Rp = -(-Rg // bm) * bm
+            Cp = -(-Cg // bn) * bn
+            Kp = -(-K // bk) * bk
+            Ap = np.zeros((Rp, Kp), np.int8)
+            Ap[:Rg, :K] = A_all
+            Wp = np.zeros((Kp, Cp), np.int8)
+            Wp[:K, :Cg] = W.T
+            if shift is not None:
+                out = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
+                                      epilogue="requant", shift=shift,
+                                      interpret=interpret)
+            else:
+                out = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
+                                      interpret=interpret)
+            mat = np.asarray(out)[:Rg, :Cg].astype(np.int32)
+            off = 0
+            for g, A in parts:
+                rows = A.shape[0]
+                results.append((g, mat[off:off + rows]))
+                off += rows
+
+        # 3. assemble in the tile's canonical (reset-grid) orientation
+        g0, m0 = results[0]
+        if len(results) == 1 and g0.shape == tile.grid.shape \
+                and (g0 == tile.grid).all():
+            acc = m0
+        else:
+            acc = self._scatter(results, tile.grid, spec)
+        if shift is None and tile.alu_chain:
+            acc = self._alu_chain(acc, tile.alu_chain)
+        return acc
+
+    def _scatter(self, results: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 grid: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+        """Accumulate per-group sub-grid results into a matrix in `grid`'s
+        orientation (uncovered reset-region elements stay zero)."""
+        io, ii = grid.shape
+        flat = grid.ravel()
+        order = np.argsort(flat)
+        acc = np.zeros((grid.size, spec.batch, spec.block_out), np.int32)
+        for g, mat in results:
+            blocked = self._from_matrix(mat, g.shape[0], g.shape[1], spec) \
+                .reshape(-1, spec.batch, spec.block_out)
+            pos = order[np.searchsorted(flat, g.ravel(), sorter=order)]
+            np.add.at(acc, pos, blocked)
+        return self._to_matrix(
+            acc.reshape(io, ii, spec.batch, spec.block_out), spec)
+
+    def _alu_chain(self, acc, chain: Sequence[tuple]) -> "np.ndarray":
         """Apply the recorded epilogue; consecutive immediate ops fuse into
         one tensor_alu pass (the §2.5 resource-balance trade).  `acc` may
-        be a numpy or on-device array; returns the same (padded) shape."""
+        be a numpy or on-device array; returns the same shape."""
         import jax.numpy as jnp
 
         from ..kernels.tensor_alu import tensor_alu
@@ -500,14 +620,33 @@ class PallasBackend:
                 i = j
             else:
                 _, op, src = chain[i]
-                if pad_to is not None and src.shape != tuple(pad_to):
-                    padded = np.zeros(pad_to, np.int32)
-                    padded[:src.shape[0], :src.shape[1]] = src
-                    src = padded
                 x = tensor_alu(x, jnp.asarray(src), chain=((op, None),),
                                use_pallas=True, interpret=self.interpret)
                 i += 1
         return np.asarray(x, dtype=np.int32)
+
+
+def assert_fast_path(stats: Union[RunStats, Sequence[RunStats]],
+                     allow_eager_alu: bool = False) -> None:
+    """Assert that a PallasBackend run took zero eager-loop iterations.
+
+    The eager per-uop numpy loop is the correctness net, not the product:
+    schedules that are supposed to be on the kernel fast path (matmul,
+    direct conv, im2col conv, 1x1-via-GEMM, dense vector ALU) must never
+    hit it.  Accepts one RunStats or a sequence (e.g.
+    ``CompiledProgram.last_stats``)."""
+    all_stats = [stats] if isinstance(stats, RunStats) else list(stats)
+    for s in all_stats:
+        if s.backend != "pallas":
+            continue
+        if s.eager_gemm_insns:
+            raise AssertionError(
+                f"{s.eager_gemm_insns} GEMM instruction(s) fell back to "
+                f"the eager loop ({s.coalesced_gemm_insns} coalesced)")
+        if s.eager_alu_insns and not allow_eager_alu:
+            raise AssertionError(
+                f"{s.eager_alu_insns} ALU instruction(s) fell back to "
+                f"the eager loop ({s.coalesced_alu_insns} coalesced)")
 
 
 # ----------------------------------------------------------------------

@@ -34,8 +34,8 @@ import numpy as np
 from . import hwspec as _hwspec, layout
 from .backend import BackendLike, resolve_backend
 from .compiler import AccelStep, CpuStep, SegmentBuilder
-from .conv import (ConvShape, conv1x1_eligible, conv2d_reference,
-                   lower_conv1x1, lower_conv2d)
+from .conv import (ConvShape, conv2d_reference, lower_conv1x1,
+                   lower_conv2d, lower_conv_im2col, select_conv_lowering)
 from .hwspec import HardwareSpec
 from .isa import AluOp, MemId
 from .runtime import Runtime
@@ -164,7 +164,7 @@ class Node:
     epilogue: Optional[Epilogue] = None
     conv: Optional[ConvShape] = None
     alu_op: Optional[AluOp] = None
-    fast_1x1: bool = True
+    lowering: Optional[str] = None  # resolved conv mode (see conv.py rules)
     declared_dtype: str = "int8"
     fn: Optional[Callable] = None
     fn_key: Optional[str] = None   # stable cache key for host fns
@@ -253,11 +253,28 @@ class Program:
 
     def conv2d(self, x: TensorRef, w: TensorRef, shape: ConvShape,
                epilogue: Optional[Epilogue] = None, cpu_only: bool = False,
-               fast_1x1: bool = True, name: Optional[str] = None) -> TensorRef:
+               fast_1x1: bool = True, name: Optional[str] = None,
+               lowering: Optional[str] = None) -> TensorRef:
         """y = conv2d(x, w) (+epilogue).  cpu_only ops run host-side between
-        accelerator segments (the paper's C1 split); pointwise unit-stride
-        convs take the transposed-GEMM fast path unless fast_1x1=False."""
+        accelerator segments (the paper's C1 split).
+
+        lowering selects the accelerator schedule ("direct" | "im2col" |
+        "via_matmul"; None auto-selects per the rules in conv.py) and is
+        validated HERE, at graph-build time, so an infeasible choice fails
+        with an actionable message instead of a generic error deep inside
+        a lowering pass.  The resolved mode is recorded on the node and
+        shows up in ``CompiledProgram.describe()``.  fast_1x1=False is the
+        legacy spelling of lowering="direct"."""
         spec = self.spec
+        if cpu_only:
+            if lowering is not None:
+                raise ValueError("cpu_only conv2d nodes run host-side; "
+                                 "lowering= does not apply")
+        else:
+            lowering = select_conv_lowering(
+                shape, spec,
+                lowering if lowering is not None
+                else (None if fast_1x1 else "direct"))
         if self._node(x).shape != (shape.n, shape.ic, shape.h, shape.w):
             raise ValueError(f"conv input shape {self._node(x).shape} != "
                              f"{(shape.n, shape.ic, shape.h, shape.w)}")
@@ -284,7 +301,7 @@ class Program:
             idx=idx, op="conv2d", name=name or f"conv{idx}",
             inputs=(x.idx, w.idx), shape=out_shape,
             meta=TensorMeta("conv", out_shape, "int8", spec.block_out),
-            epilogue=epilogue, conv=shape, fast_1x1=fast_1x1))
+            epilogue=epilogue, conv=shape, lowering=lowering))
 
     def vector_binop(self, a: TensorRef, b: TensorRef,
                      op: AluOp = AluOp.ADD,
@@ -350,7 +367,7 @@ class Program:
                 return None
             rows.append((n.op, n.name, n.inputs, n.shape,
                          n.meta, _epilogue_sig(n.epilogue), n.conv,
-                         n.alu_op, n.fast_1x1, n.fn_key))
+                         n.alu_op, n.lowering, n.fn_key))
         return (self.spec, self.virtual_threads, tuple(rows),
                 tuple(self._outputs))
 
@@ -434,10 +451,11 @@ def _build(prog: Program) -> "CompiledProgram":
             return lower
         if n.op == "conv2d":
             x, w = (prog.nodes[i] for i in n.inputs)
-            use_1x1 = n.fast_1x1 and conv1x1_eligible(n.conv, spec)
+            f = {"via_matmul": lower_conv1x1,
+                 "im2col": lower_conv_im2col,
+                 "direct": lower_conv2d}[n.lowering]
 
-            def lower(sram, n=n, x=x, w=w, use_1x1=use_1x1):
-                f = lower_conv1x1 if use_1x1 else lower_conv2d
+            def lower(sram, n=n, x=x, w=w, f=f):
                 f(rt, x_base=elem(x.idx), w_base=elem(w.idx),
                   y_base=elem(n.idx), shape=n.conv, epilogue=n.epilogue,
                   bias_base=bias_base.get(n.idx, -1),
@@ -518,10 +536,17 @@ class CompiledProgram:
         return sum(s.n_barriers for s in self.accel_steps)
 
     def describe(self) -> str:
+        """One line per step; conv nodes carry their resolved lowering
+        mode (direct | im2col | via_matmul) so the scheduling decision is
+        inspectable without decoding the stream."""
+        def label(i: int) -> str:
+            n = self.nodes[i]
+            return f"{n.name}:{n.lowering}" if n.lowering else n.name
+
         parts = []
         for s in self.steps:
             if isinstance(s, AccelStep):
-                names = ",".join(self.nodes[i].name for i in s.node_ids)
+                names = ",".join(label(i) for i in s.node_ids)
                 parts.append(f"accel[{names}: {s.insn_count} insns, "
                              f"{s.n_barriers} barriers]")
             else:

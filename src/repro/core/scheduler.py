@@ -64,7 +64,17 @@ class _ThreadDeps:
         rt.dep_push(COMPUTE_Q, LOAD_Q)
         self.c2l_pending = True
 
-    def compute_to_store(self, rt: Runtime) -> None:
+    def compute_to_store(self, rt: Runtime, own_insn: bool = True) -> None:
+        """Signal the store module that this tile's accumulator is ready.
+        The token must ride on an instruction of *this thread's* epilogue:
+        dep_push attaches to the last compute-queue instruction, so a tile
+        whose epilogue emitted nothing (n_alu_passes == 0, the wraparound
+        store) must emit a compute noop first — otherwise the push lands
+        on the interleaved peer thread's GEMM and, since a flag bit can
+        only be set once, the second thread's push is silently lost and
+        the stream deadlocks at its store (fuzzer-found)."""
+        if not own_insn:
+            rt.noop(COMPUTE_Q)
         rt.dep_push(COMPUTE_Q, STORE_Q)
 
     def begin_store(self, rt: Runtime) -> None:
@@ -260,8 +270,12 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
     m`` — and writes C N-major at ``c_base + nb*c_stride + m`` (strides
     default to Mb).  That is exactly the 1x1-conv fast path: a blocked
     NCHW activation plane *is* a K-major matrix over (channel-block,
-    pixel), and the N-major output *is* the blocked NCHW result.
-    Requires spec.batch == 1 (pixel rows are not batch-blocked).
+    pixel), and the N-major output *is* the blocked NCHW result.  The
+    schedule only moves (BATCH x block) tensor-register elements, so it is
+    batch-agnostic: for batch-blocked specs the register rows carry one
+    image block per element (the caller owns that interpretation — a
+    batch-blocked *matrix* packed by ``pack_inp`` is row-blocked and would
+    need ``transposed=False``).
 
     Returns the chosen (mt, nt, kt) tile sizes.
     """
@@ -270,8 +284,6 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
     has_bias = ep.bias_blocked is not None
     if has_bias != (bias_base >= 0):
         raise ValueError("epilogue.bias_blocked and bias_base must agree")
-    if transposed and spec.batch != 1:
-        raise ValueError("transposed matmul lowering requires batch == 1")
     sram = sram or SramPartition.full(spec)
     if a_stride is None:
         a_stride = Mb if transposed else Kb
@@ -402,7 +414,7 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
                                         self_fo, self_fi, "self"),
                         op=AluOp.MIN, imm=ep.clip_hi)
         # ---- store ----
-        d.compute_to_store(rt)
+        d.compute_to_store(rt, own_insn=ep.n_alu_passes > 0)
         d.begin_store(rt)
         if transposed:
             rt.store_buffer_2d(acc_base,

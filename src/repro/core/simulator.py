@@ -98,6 +98,20 @@ class RunStats:
     tokens_pushed: int = 0
     backend: str = "simulator"   # which execution engine produced this run
     wall_time_s: float = 0.0     # host wall-clock of the engine (not cycles)
+    # PallasBackend fast-path accounting (always 0 on the simulator, which
+    # has no coalescer): compute instructions absorbed into lazy tiles and
+    # resolved through the Pallas kernels vs. ones that fell back to the
+    # eager per-uop numpy loop.
+    coalesced_gemm_insns: int = 0
+    coalesced_alu_insns: int = 0
+    eager_gemm_insns: int = 0
+    eager_alu_insns: int = 0
+
+    @property
+    def eager_compute_insns(self) -> int:
+        """Compute instructions the PallasBackend executed on the eager
+        per-uop fallback instead of the kernel fast path."""
+        return self.eager_gemm_insns + self.eager_alu_insns
 
     @property
     def compute_utilization(self) -> float:

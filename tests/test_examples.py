@@ -22,6 +22,9 @@ def test_quickstart():
     assert "exact int8 result ok" in out
     assert "virtual_threads=2" in out
     assert "program JIT ok" in out
+    # step 8: kh*kw>1 conv on the coalesced fast path, mode surfaced
+    assert "c2:direct" in out
+    assert "0 eager fallbacks" in out
 
 
 def test_resnet18_offload():
@@ -31,6 +34,8 @@ def test_resnet18_offload():
     assert out.count("exact end-to-end") == 2
     assert "cpu step(s)" in out
     assert "stream cache hit" in out
+    # the kh*kw>1 body conv stays on the coalesced fast path
+    assert ":direct" in out and "0 eager fallbacks" in out
 
 
 def test_train_lm_short():

@@ -1,0 +1,121 @@
+"""Golden instruction-stream regression tests.
+
+The scheduler's output *shape* — instruction counts per module, opcode
+histogram, dependence-token balance, program-level barrier count — is a
+contract: backends coalesce against it, the timing model prices it, and
+silent changes (an extra load per tile, a lost WAR token, a barrier where
+a drain sufficed) are exactly the regressions that keep results correct
+but quietly destroy overlap or fast-path coverage.  These tests pin that
+shape for one fixed schedule per lowering mode (matmul, direct conv,
+im2col conv, 1x1-via-GEMM) on the pynq template.
+
+If a change here is *intentional* (a better schedule), update the GOLDEN
+table in the same commit and say why in the message.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import hwspec
+from repro.core.conv import ConvShape, schedule_conv2d
+from repro.core.isa import COMPUTE_Q, LOAD_Q, STORE_Q, route_queue
+from repro.core.program import Program
+from repro.core.runtime import Runtime
+from repro.core.scheduler import Epilogue, schedule_matmul
+
+
+def snapshot(rt: Runtime) -> dict:
+    q = Counter(route_queue(i) for i in rt.stream)
+    op = Counter(i.opcode.name for i in rt.stream)
+    return dict(n=len(rt.stream),
+                load=q[LOAD_Q], compute=q[COMPUTE_Q], store=q[STORE_Q],
+                ops=dict(sorted(op.items())),
+                balance=rt.token_balance())
+
+
+_CONV = ConvShape(n=1, h=14, w=14, ic=32, oc=32, kh=3, kw=3, stride=1, pad=1)
+_CONV_EP = Epilogue(shift=5, relu=True)
+_PW = ConvShape(n=2, h=8, w=8, ic=32, oc=48, kh=1, kw=1, stride=1, pad=0)
+
+GOLDEN = {
+    # C = A@W^T requant, 64x64x64, vt=2: one macro tile per thread pair
+    "matmul": dict(n=11, load=2, compute=8, store=1,
+                   ops={"ALU": 3, "GEMM": 2, "LOAD": 5, "STORE": 1},
+                   balance={"l2c": 0, "c2l": 1, "c2s": 0, "s2c": 1}),
+    # direct conv: one GEMM per output row (oht=14 rows + reset), padded
+    # 2D DMAs, 2 output-channel-block stores
+    "conv_direct": dict(n=40, load=3, compute=35, store=2,
+                        ops={"ALU": 4, "GEMM": 15, "LOAD": 19, "STORE": 2},
+                        balance={"l2c": 0, "c2l": 1, "c2s": 0, "s2c": 1}),
+    # im2col conv: kh*kw*cbt gather DMAs per k-chunk, ONE GEMM per chunk
+    "conv_im2col": dict(n=109, load=76, compute=29, store=4,
+                        ops={"ALU": 12, "GEMM": 8, "LOAD": 85, "STORE": 4},
+                        balance={"l2c": 0, "c2l": 2, "c2s": 0, "s2c": 2}),
+    # pointwise via transposed GEMM, n=2 image planes joined by a barrier
+    "conv1x1": dict(n=26, load=7, compute=15, store=4,
+                    ops={"ALU": 6, "GEMM": 6, "LOAD": 10, "STORE": 4},
+                    balance={"l2c": 0, "c2l": 1, "c2s": 0, "s2c": 1}),
+}
+
+
+def _schedule(name: str) -> Runtime:
+    spec = hwspec.pynq()
+    rng = np.random.default_rng(0)
+    rt = Runtime(spec)
+    if name == "matmul":
+        a = rng.integers(-128, 128, size=(64, 64), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(64, 64), dtype=np.int8)
+        schedule_matmul(rt, a, w, epilogue=Epilogue(shift=5),
+                        virtual_threads=2)
+    elif name in ("conv_direct", "conv_im2col"):
+        x = rng.integers(-64, 64, size=(1, 32, 14, 14), dtype=np.int8)
+        k = rng.integers(-16, 16, size=(32, 32, 3, 3), dtype=np.int8)
+        schedule_conv2d(rt, x, k, _CONV, epilogue=_CONV_EP,
+                        lowering=name.split("_")[1])
+    else:
+        x = rng.integers(-64, 64, size=(2, 32, 8, 8), dtype=np.int8)
+        k = rng.integers(-16, 16, size=(48, 32, 1, 1), dtype=np.int8)
+        schedule_conv2d(rt, x, k, _PW, epilogue=Epilogue(shift=4),
+                        lowering="via_matmul")
+    return rt
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_stream_shape_is_stable(name):
+    got = snapshot(_schedule(name))
+    assert got == GOLDEN[name], (
+        f"{name} stream shape changed: {got} != {GOLDEN[name]} — if this "
+        "is an intentional schedule change, update GOLDEN and justify it")
+
+
+def test_streams_are_deterministic():
+    """Same inputs -> byte-identical encoded streams (the JIT-cache and
+    golden-test premise)."""
+    for name in GOLDEN:
+        s1 = _schedule(name).finalize_stream()
+        s2 = _schedule(name).finalize_stream()
+        np.testing.assert_array_equal(s1, s2, err_msg=name)
+
+
+def test_program_chain_barriers_and_modes():
+    """A direct conv chained into a pointwise conv compiles to ONE stream
+    with exactly one join barrier (dependent ops, scratchpad reuse), no
+    partial drains, and the per-node lowering decisions visible in
+    describe()."""
+    spec = hwspec.pynq()
+    p = Program(spec)
+    t = p.conv2d(p.input("x", (1, 32, 14, 14)),
+                 p.input("k", (32, 32, 3, 3)), _CONV, epilogue=_CONV_EP,
+                 name="body")
+    p.conv2d(t, p.input("k3", (32, 32, 1, 1)),
+             ConvShape(n=1, h=14, w=14, ic=32, oc=32, kh=1, kw=1,
+                       stride=1, pad=0),
+             epilogue=Epilogue(shift=4), name="point")
+    c = p.compile(use_cache=False)
+    (step,) = c.accel_steps
+    assert c.insn_count == 59
+    assert c.n_barriers == 1
+    assert step.n_drains == 0
+    assert c.describe() == ("accel[body:direct,point:via_matmul: "
+                            "59 insns, 1 barriers]")

@@ -269,6 +269,49 @@ def test_conv1x1_fast_path_hits_pallas_gemm():
         conv2d_reference(x, w, shape, epilogue=Epilogue(shift=4)))
 
 
+def test_conv1x1_batch_blocked_through_program():
+    """The old spec.batch==1 restriction is gone: a batch-blocked template
+    instance auto-selects via_matmul for pointwise convs and stays exact
+    on both engines."""
+    spec = hwspec.HardwareSpec(batch=2)
+    shape = ConvShape(n=3, h=6, w=6, ic=32, oc=32, kh=1, kw=1,
+                      stride=1, pad=0)
+    rng = np.random.default_rng(17)
+    x = rng.integers(-64, 64, size=(3, 32, 6, 6), dtype=np.int8)
+    w = rng.integers(-16, 16, size=(32, 32, 1, 1), dtype=np.int8)
+    ep = Epilogue(shift=4, relu=True)
+    p = Program(spec)
+    p.conv2d(p.input("x", x.shape), p.input("w", w.shape), shape,
+             epilogue=ep, name="pw")
+    compiled = p.compile(use_cache=False)
+    assert "pw:via_matmul" in compiled.describe()
+    ref = conv2d_reference(x, w, shape, epilogue=ep)
+    for backend in BACKENDS:
+        np.testing.assert_array_equal(
+            compiled(backend=backend, x=x, w=w), ref, err_msg=backend)
+
+
+def test_conv_lowering_validated_at_build_time():
+    """Infeasible lowering choices fail in Program.conv2d() with an
+    actionable message, not deep inside a lowering pass."""
+    p = Program()
+    x = p.input("x", (1, 32, 8, 8))
+    w = p.input("w", (32, 32, 3, 3))
+    strided = ConvShape(n=1, h=8, w=8, ic=32, oc=32, kh=3, kw=3,
+                        stride=2, pad=1)
+    with pytest.raises(ValueError, match="im2col.*stride=1.*direct"):
+        p.conv2d(x, w, strided, lowering="im2col")
+    with pytest.raises(ValueError, match="via_matmul.*pointwise"):
+        p.conv2d(x, w, strided, lowering="via_matmul")
+    with pytest.raises(ValueError, match="unknown conv lowering"):
+        p.conv2d(x, w, strided, lowering="winograd")
+    with pytest.raises(ValueError, match="cpu_only"):
+        p.conv2d(x, w, strided, cpu_only=True, lowering="direct")
+    # failed adds leave the graph untouched and usable
+    p.conv2d(x, w, strided, name="ok")
+    assert p.compile(use_cache=False).insn_count > 0
+
+
 # ----------------------------------------------------------------------
 # vector-ALU fast path in PallasBackend
 # ----------------------------------------------------------------------
