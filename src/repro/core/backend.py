@@ -45,7 +45,8 @@ from .isa import (AluInsn, AluOp, DEP_IN_EDGES, DEP_OUT_EDGES, FinishInsn,
                   GemmInsn, Insn, IsaLayout, LoadStoreInsn, MemId, Opcode,
                   route_queue, LOAD_Q, COMPUTE_Q, STORE_Q)
 from .simulator import (DeadlockError, ModuleStats, RunStats, Simulator,
-                        TimingModel, run_program, _MODULE_NAMES)
+                        TimingModel, replay_timing, run_program,
+                        _MODULE_NAMES)
 
 
 # ----------------------------------------------------------------------
@@ -54,12 +55,16 @@ from .simulator import (DeadlockError, ModuleStats, RunStats, Simulator,
 @runtime_checkable
 class ExecutionBackend(Protocol):
     """Anything that can run an encoded VTA instruction stream against a
-    device and report RunStats."""
+    device and report RunStats.  ``staged_addr`` (when >= 0 / not None)
+    names a pre-staged DRAM copy of the same stream: the engine kicks the
+    fetch registers at it instead of re-staging — the serving fast path's
+    zero-allocation repeat call."""
 
     name: str
 
     def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
-                timing: Optional[TimingModel] = None) -> RunStats:
+                timing: Optional[TimingModel] = None,
+                staged_addr: Optional[int] = None) -> RunStats:
         ...
 
 
@@ -72,9 +77,12 @@ class SimulatorBackend:
         self.timing = timing
 
     def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
-                timing: Optional[TimingModel] = None) -> RunStats:
+                timing: Optional[TimingModel] = None,
+                staged_addr: Optional[int] = None) -> RunStats:
         t0 = time.perf_counter()
-        stats = run_program(spec, device, stream, timing=timing or self.timing)
+        stats = run_program(spec, device, stream,
+                            timing=timing or self.timing,
+                            staged_addr=staged_addr)
         stats.wall_time_s = time.perf_counter() - t0
         stats.backend = self.name
         return stats
@@ -90,6 +98,9 @@ _ALU_NAMES = {AluOp.MIN: "min", AluOp.MAX: "max", AluOp.ADD: "add",
 # (shared with the runtime's static validator)
 _IN_EDGES = DEP_IN_EDGES
 _OUT_EDGES = DEP_OUT_EDGES
+
+# content-addressed decoded-stream cache (see PallasBackend._decode_cached)
+_DECODE_CACHE: Dict[tuple, List[Insn]] = {}
 
 
 @dataclass
@@ -141,37 +152,82 @@ class PallasBackend:
     ``coalesce_subgrids=False`` restricts coalescing to instructions whose
     grid equals the tile's reset grid exactly (the pre-generalization
     behavior, which sent direct-conv schedules to the eager loop) — kept
-    as an A/B switch for benchmarks and debugging.
+    as an A/B switch for benchmarks and debugging.  ``batch_tiles=False``
+    likewise disables the batched tile dispatch (one kernel launch per
+    pending tile, the pre-serving-path behavior).
     """
 
     name = "pallas"
 
     def __init__(self, interpret: Optional[bool] = None,
                  check_tokens: bool = True,
-                 coalesce_subgrids: bool = True):
+                 coalesce_subgrids: bool = True,
+                 batch_tiles: bool = True,
+                 cache_decode: bool = True):
         # interpret=None -> auto (native on TPU, interpreter elsewhere)
         self.interpret = interpret
         self.check_tokens = check_tokens
         self.coalesce_subgrids = coalesce_subgrids
+        self.batch_tiles = batch_tiles
+        self.cache_decode = cache_decode
 
     # ------------------------------------------------------------------
     def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
-                timing: Optional[TimingModel] = None) -> RunStats:
+                timing: Optional[TimingModel] = None,
+                staged_addr: Optional[int] = None) -> RunStats:
         """Same control handshake as the hardware path: the stream is
-        DMA'd to DRAM, the fetch registers are kicked, and the engine
-        runs to FINISH.  `timing` is accepted for interface parity but
-        ignored — this engine reports wall-clock, not cycles."""
+        DMA'd to DRAM (or a pre-staged copy at `staged_addr` is kicked —
+        zero per-call allocation), the fetch registers are set, and the
+        engine runs to FINISH.  With `timing`, the same TimingModel
+        cycle-accounting the simulator performs is replayed over the
+        decoded stream, so RunStats.total_cycles is meaningful on both
+        engines (wall_time_s stays this engine's real clock)."""
         t0 = time.perf_counter()
         isa = IsaLayout(spec)
-        addr = device.stage_stream(stream)
+        if staged_addr is None:
+            addr = device.stage_stream(stream)
+        else:
+            addr = staged_addr
+            device.kick_stream(addr, stream.shape[0])
         raw = device.dram.read(
             addr, stream.shape[0] * isa.insn_bytes,
             dtype=np.uint64, shape=(stream.shape[0], isa.insn_words))
-        stats = self._run(spec, device, isa.decode_stream(raw))
+        insns = self._decode_cached(spec, isa, raw)
+        stats = self._run(spec, device, insns)
         device.regs.set_done()
         stats.backend = self.name
         stats.wall_time_s = time.perf_counter() - t0
+        if timing is not None:
+            # cycle replay happens OUTSIDE the wall-clock window: the
+            # pure-python scheduler pass prices the stream, it is not
+            # part of this engine's execution time
+            rep = replay_timing(spec, insns, timing)
+            stats.total_cycles = rep.total_cycles
+            for nm, ms in rep.modules.items():
+                stats.modules[nm].busy_cycles = ms.busy_cycles
+                stats.modules[nm].stall_on_token = ms.stall_on_token
         return stats
+
+    def _decode_cached(self, spec: HardwareSpec, isa: IsaLayout,
+                       raw: np.ndarray) -> List[Insn]:
+        """Decode the raw stream words, memoized by content digest: a
+        serving loop re-running one pre-staged stream pays the (pure
+        python) decode exactly once.  Keyed on the bytes actually read
+        from DRAM, so there is still no side channel."""
+        import hashlib
+        if not self.cache_decode:
+            return isa.decode_stream(raw)
+        key = (spec, hashlib.sha1(raw.tobytes()).hexdigest())
+        hit = _DECODE_CACHE.pop(key, None)
+        if hit is not None:
+            _DECODE_CACHE[key] = hit   # re-insert: LRU order by last hit
+            return hit
+        insns = isa.decode_stream(raw)
+        if len(_DECODE_CACHE) >= 128:
+            # evict the least-recently-used entry; hot streams survive
+            _DECODE_CACHE.pop(next(iter(_DECODE_CACHE)))
+        _DECODE_CACHE[key] = insns
+        return insns
 
     # ------------------------------------------------------------------
     def _run(self, spec: HardwareSpec, device: Device,
@@ -240,20 +296,74 @@ class PallasBackend:
     # ------------------------------------------------------------------
     def _materialize_range(self, st: _RunState, lo: int, hi: int,
                            stats: RunStats) -> None:
+        need = []
         for base in list(st.pending):
             t = st.pending[base]
             if t.indices[0] < hi and lo <= t.indices[-1]:
                 if np.any((t.indices >= lo) & (t.indices < hi)):
-                    self._materialize(st, t, stats)
-                    del st.pending[base]
+                    need.append(base)
+        if need:
+            # store / ACC-load trigger: peer virtual-thread tiles of the
+            # same op are complete here (their epilogues precede the
+            # group's first store in program order) — batch them along
+            self._materialize_group(st, need, stats, batch_peers=True)
 
     def _materialize_indices(self, st: _RunState, idx: np.ndarray,
                              stats: RunStats) -> None:
-        for base in list(st.pending):
-            t = st.pending[base]
-            if np.isin(idx, t.indices, assume_unique=False).any():
+        need = [base for base in list(st.pending)
+                if np.isin(idx, st.pending[base].indices,
+                           assume_unique=False).any()]
+        if need:
+            # eager-fallback trigger: other pending tiles may still be
+            # mid-accumulation, resolve only what is forced
+            self._materialize_group(st, need, stats, batch_peers=False)
+
+    def _materialize_group(self, st: _RunState, keys: Sequence[int],
+                           stats: RunStats, batch_peers: bool) -> None:
+        """Resolve the pending tiles at `keys` — plus, with batch_peers,
+        any structurally-identical pending peers — grouping same-plan
+        tiles into ONE (vmapped) kernel launch per GEMM stage instead of
+        one launch per tile (the batched tile dispatch)."""
+        tiles = [st.pending.pop(k) for k in keys]
+        if not self.batch_tiles:
+            for t in tiles:
                 self._materialize(st, t, stats)
-                del st.pending[base]
+            return
+        planned: List[Tuple[Optional[tuple], _PendingTile,
+                            Optional[tuple]]] = []
+        for t in tiles:
+            if t.chunks:
+                plan = self._plan_tile(t)
+                planned.append((self._plan_key(t, plan), t, plan))
+            else:
+                planned.append((None, t, None))
+        if batch_peers:
+            sigs = {k for k, _, _ in planned if k is not None}
+            # cheap structural pre-filter so tiles of unrelated in-flight
+            # ops are rejected without paying _plan_tile's chunk copies
+            pre_sigs = {self._pre_key(t) for _, t, _ in planned if t.chunks}
+            if sigs:
+                for base in list(st.pending):
+                    peer = st.pending[base]
+                    if not peer.chunks or self._pre_key(peer) not in pre_sigs:
+                        continue
+                    plan = self._plan_tile(peer)
+                    k = self._plan_key(peer, plan)
+                    if k in sigs:
+                        del st.pending[base]
+                        planned.append((k, peer, plan))
+        groups: Dict[tuple, List[Tuple[_PendingTile, tuple]]] = {}
+        for k, t, plan in planned:
+            if k is None:
+                self._materialize(st, t, stats)   # reset/ALU-only tiles
+            else:
+                groups.setdefault(k, []).append((t, plan))
+        for grp in groups.values():
+            tiles_g = [t for t, _ in grp]
+            plans_g = [p for _, p in grp]
+            accs = self._resolve_tiles(tiles_g, plans_g, stats, st.sim.spec)
+            for tile, acc in zip(tiles_g, accs):
+                self._writeback(st, tile, acc, stats)
 
     @staticmethod
     def _overlaps_pending(st: _RunState, idx: np.ndarray) -> bool:
@@ -461,20 +571,28 @@ class PallasBackend:
 
     def _materialize(self, st: _RunState, tile: _PendingTile,
                      stats: RunStats) -> None:
-        sim = st.sim
-        s = sim.spec
+        s = st.sim.spec
         io, ii = tile.grid.shape
         R, C = io * s.batch, ii * s.block_out
         if tile.chunks:
-            acc = self._resolve_tile(tile, R, C, s)
+            plan = self._plan_tile(tile)
+            acc = self._resolve_tiles([tile], [plan], stats, s)[0]
         elif tile.alu_chain:
             acc = self._alu_chain(np.zeros((R, C), np.int32), tile.alu_chain)
         else:
             acc = np.zeros((R, C), np.int32)
+        self._writeback(st, tile, acc, stats)
+
+    def _writeback(self, st: _RunState, tile: _PendingTile, acc: np.ndarray,
+                   stats: RunStats) -> None:
+        sim = st.sim
+        s = sim.spec
+        io, ii = tile.grid.shape
         sim.acc_sram[tile.grid] = self._from_matrix(acc, io, ii, s)
         # §2.5 write-through mirror: OUT narrows with a truncating cast
         sim.out_sram[tile.indices] = \
             sim.acc_sram[tile.indices].astype(np.int8)
+        stats.tiles_resolved += 1
 
     @staticmethod
     def _requant_shift(chain: Sequence[tuple]) -> Optional[int]:
@@ -489,29 +607,16 @@ class PallasBackend:
             return shift
         return None
 
-    def _resolve_tile(self, tile: _PendingTile, R: int, C: int,
-                      spec: HardwareSpec) -> np.ndarray:
-        """Resolve a tile's recorded GEMM chunks through batched
-        ``vta_gemm`` calls.
-
-        Chunks that accumulated onto the *same* grid (the reduction loop)
+    def _plan_tile(self, tile: _PendingTile):
+        """Stage 1+2 of tile resolution (pure bookkeeping, no kernels):
+        chunks that accumulated onto the *same* grid (the reduction loop)
         concatenate along K; grids that multiplied the *same* weight tile
         — the direct-conv structure, one instruction per output row —
-        stack along the row axis, so the whole tile resolves in one Pallas
-        call per distinct weight tile (one call total for both the matmul
-        and the direct-conv schedules).  The ALU chain fuses into the
-        kernel's requant epilogue in the canonical shift+clip case
-        (elementwise, hence legal exactly when the chunk grids are
-        pairwise disjoint — each element's full reduction then lives in
-        one kernel call); otherwise it is applied to the assembled tile
-        with ``tensor_alu`` passes."""
-        import jax.numpy as jnp
-
-        from ..kernels._compat import resolve_interpret
-        from ..kernels.vta_gemm.kernel import vta_gemm_pallas
-        interpret = resolve_interpret(self.interpret)
-
-        # 1. concatenate same-grid chunks along K (reduction accumulation)
+        row-stack into one GEMM per distinct weight tile.  Returns
+        (wgroups, shift): wgroups = [(W, [(grid, A), ...]), ...]; shift is
+        the requant shift when the ALU chain fuses into the kernel
+        epilogue (chunk grids pairwise disjoint + canonical shr/clip
+        chain), else None."""
         merged: List[Tuple[np.ndarray, List[np.ndarray], List[np.ndarray]]] \
             = []
         index: Dict[tuple, int] = {}
@@ -532,7 +637,6 @@ class PallasBackend:
             np.concatenate([g.ravel() for g, _, _ in groups])).size == n_ids
         shift = self._requant_shift(tile.alu_chain) if disjoint else None
 
-        # 2. row-stack groups sharing one weight tile -> batched GEMM
         wgroups: List[Tuple[np.ndarray,
                             List[Tuple[np.ndarray, np.ndarray]]]] = []
         windex: Dict[tuple, int] = {}
@@ -543,45 +647,136 @@ class PallasBackend:
             else:
                 windex[key] = len(wgroups)
                 wgroups.append((W, [(g, A)]))
+        return wgroups, shift
 
-        results: List[Tuple[np.ndarray, np.ndarray]] = []
-        for W, parts in wgroups:
-            A_all = parts[0][1] if len(parts) == 1 else \
-                np.concatenate([A for _, A in parts], axis=0)
-            Rg, K = A_all.shape
-            Cg = W.shape[0]
-            bm = bn = bk = 128
-            Rp = -(-Rg // bm) * bm
-            Cp = -(-Cg // bn) * bn
-            Kp = -(-K // bk) * bk
-            Ap = np.zeros((Rp, Kp), np.int8)
-            Ap[:Rg, :K] = A_all
-            Wp = np.zeros((Kp, Cp), np.int8)
-            Wp[:K, :Cg] = W.T
+    @staticmethod
+    def _pre_key(tile: _PendingTile) -> tuple:
+        """O(#chunks) structural fingerprint (no data copies) used to
+        pre-filter batch-peer candidates before the full plan is built."""
+        base = int(tile.indices[0])
+        return (tile.grid.shape, (tile.grid - base).tobytes(),
+                tuple((c.grid.shape, c.a.shape, c.w.shape)
+                      for c in tile.chunks),
+                tuple((k, op, x) if k == "imm" else (k, op, x.shape)
+                      for k, op, x in tile.alu_chain))
+
+    @staticmethod
+    def _plan_key(tile: _PendingTile, plan) -> tuple:
+        """Structural signature of a tile's resolution plan.  Tiles with
+        equal keys (peer virtual-thread contexts of one op) run the same
+        kernel shapes over the same relative index structure and can be
+        resolved by ONE vmapped launch per GEMM stage."""
+        wgroups, shift = plan
+        base = int(tile.indices[0])
+        alu_sig = tuple(
+            (k, op, x) if k == "imm" else (k, op, x.shape)
+            for k, op, x in tile.alu_chain)
+        return (shift, tile.grid.shape, (tile.grid - base).tobytes(),
+                alu_sig,
+                tuple((W.shape,
+                       tuple((g.shape, (g - base).tobytes(), A.shape)
+                             for g, A in parts))
+                      for W, parts in wgroups))
+
+    def _resolve_tiles(self, tiles: Sequence[_PendingTile],
+                       plans: Sequence[tuple], stats: RunStats,
+                       spec: HardwareSpec) -> List[np.ndarray]:
+        """Execute structurally-identical tile plans: per GEMM stage the
+        tiles' padded operands stack along a leading tile axis and run as
+        ONE ``vta_gemm`` launch (``jax.vmap`` over the tile axis; plain
+        call when there is a single tile) — cutting per-tile dispatch
+        overhead; requant fuses into the kernel epilogue exactly as in
+        the per-tile path.  Non-fused ALU chains apply to the row-stacked
+        tile batch in one ``tensor_alu`` pass per chain step.  Returns
+        one assembled (R, C) int32 accumulator matrix per tile."""
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels._compat import resolve_interpret
+        from ..kernels.vta_gemm.kernel import vta_gemm_pallas
+        interpret = resolve_interpret(self.interpret)
+
+        T = len(tiles)
+        wgroups0, shift = plans[0]
+        results_per_tile: List[List[Tuple[np.ndarray, np.ndarray]]] = \
+            [[] for _ in range(T)]
+        for wi in range(len(wgroups0)):
+            Aps, Wps = [], []
+            Rg = Cg = 0
+            for wgroups, _shift in plans:
+                W, parts = wgroups[wi]
+                A_all = parts[0][1] if len(parts) == 1 else \
+                    np.concatenate([A for _, A in parts], axis=0)
+                Rg, K = A_all.shape
+                Cg = W.shape[0]
+                bm = bn = bk = 128
+                Rp = -(-Rg // bm) * bm
+                Cp = -(-Cg // bn) * bn
+                Kp = -(-K // bk) * bk
+                Ap = np.zeros((Rp, Kp), np.int8)
+                Ap[:Rg, :K] = A_all
+                Wp = np.zeros((Kp, Cp), np.int8)
+                Wp[:K, :Cg] = W.T
+                Aps.append(Ap)
+                Wps.append(Wp)
+            kw = dict(interpret=interpret)
             if shift is not None:
-                out = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
-                                      epilogue="requant", shift=shift,
-                                      interpret=interpret)
+                kw.update(epilogue="requant", shift=shift)
+            if T == 1:
+                outs = [vta_gemm_pallas(jnp.asarray(Aps[0]),
+                                        jnp.asarray(Wps[0]), **kw)]
             else:
-                out = vta_gemm_pallas(jnp.asarray(Ap), jnp.asarray(Wp),
-                                      interpret=interpret)
-            mat = np.asarray(out)[:Rg, :Cg].astype(np.int32)
-            off = 0
-            for g, A in parts:
-                rows = A.shape[0]
-                results.append((g, mat[off:off + rows]))
-                off += rows
+                outs = jax.vmap(functools.partial(vta_gemm_pallas, **kw))(
+                    jnp.asarray(np.stack(Aps)), jnp.asarray(np.stack(Wps)))
+            stats.tile_batches += 1
+            outs = np.asarray(outs)
+            for t in range(T):
+                mat = outs[t][:Rg, :Cg].astype(np.int32)
+                off = 0
+                for g, A in plans[t][0][wi][1]:
+                    rows = A.shape[0]
+                    results_per_tile[t].append((g, mat[off:off + rows]))
+                    off += rows
 
-        # 3. assemble in the tile's canonical (reset-grid) orientation
-        g0, m0 = results[0]
-        if len(results) == 1 and g0.shape == tile.grid.shape \
-                and (g0 == tile.grid).all():
-            acc = m0
-        else:
-            acc = self._scatter(results, tile.grid, spec)
-        if shift is None and tile.alu_chain:
-            acc = self._alu_chain(acc, tile.alu_chain)
-        return acc
+        accs: List[np.ndarray] = []
+        for t, tile in enumerate(tiles):
+            results = results_per_tile[t]
+            g0, m0 = results[0]
+            if len(results) == 1 and g0.shape == tile.grid.shape \
+                    and (g0 == tile.grid).all():
+                acc = m0
+            else:
+                acc = self._scatter(results, tile.grid, spec)
+            accs.append(acc)
+        if shift is None and tiles[0].alu_chain:
+            accs = self._alu_chain_batch(accs,
+                                         [t.alu_chain for t in tiles])
+        return accs
+
+    def _alu_chain_batch(self, accs: List[np.ndarray],
+                         chains: Sequence[Sequence[tuple]]
+                         ) -> List[np.ndarray]:
+        """Apply structurally-identical per-tile ALU chains to the whole
+        tile batch in one pass: accumulators row-stack into a single
+        matrix, tensor operands (bias rows) stack the same way, and each
+        chain step becomes ONE tensor_alu launch for all tiles."""
+        T = len(accs)
+        if T == 1:
+            return [self._alu_chain(accs[0], chains[0])]
+        R = accs[0].shape[0]
+        x = np.concatenate(accs, axis=0)
+        chain: List[tuple] = []
+        for i, entry in enumerate(chains[0]):
+            if entry[0] == "imm":
+                chain.append(entry)
+            else:
+                chain.append(("tensor", entry[1],
+                              np.concatenate([c[i][2] for c in chains],
+                                             axis=0)))
+        out = self._alu_chain(x, chain)
+        return [out[t * R:(t + 1) * R] for t in range(T)]
 
     def _scatter(self, results: Sequence[Tuple[np.ndarray, np.ndarray]],
                  grid: np.ndarray, spec: HardwareSpec) -> np.ndarray:

@@ -11,16 +11,26 @@ safe live here:
     together (their load/compute/store phases interleave in one stream);
 
   * **cross-op dependence tokens**: dependent ops — or ops forced to reuse
-    scratchpad — are separated by a full ``join_barrier`` (drain stale
-    tokens, rendezvous on the compute module, resume).  Overlapping
-    independent ops still get a ``drain_dep_tokens`` partial fence, because
-    VTA tokens are information-less: a predecessor's unconsumed tokens
-    would shift the successor's push/pop pairing one generation early and
-    silently break its own WAR protocol;
+    scratchpad — are separated by a *buffer-granular fence*
+    (``Runtime.buffer_fence``): only the consumer's loads of the produced
+    buffer wait on the producer's final store, so the consumer's first
+    weight tile DMAs while the producer's epilogue and store tail drain —
+    dependent layers double-buffer across the op boundary.
+    ``fence_mode="barrier"`` keeps the old full ``join_barrier``
+    rendezvous as the A/B baseline.  Overlapping independent ops still get
+    a ``drain_dep_tokens`` partial fence, because VTA tokens are
+    information-less: a predecessor's unconsumed tokens would shift the
+    successor's push/pop pairing one generation early and silently break
+    its own WAR protocol;
 
   * **segmentation**: ``cpu_only`` graph nodes split the stream into
     accelerator segments with host steps between them — real heterogeneous
     execution, the Fig. 16 offload split executed rather than modelled.
+
+Every fence and barrier is also a **DRAM liveness point**: all earlier
+ops' loads are complete once it retires, so the program builder's arena
+allocator (see ``program._build``) recycles dead intermediate buffers
+exactly at these placements — ``out_alloc(sync=True)`` below.
 """
 from __future__ import annotations
 
@@ -29,19 +39,27 @@ from typing import Callable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from .isa import COMPUTE_Q, LOAD_Q
 from .runtime import Runtime
 from .scheduler import SramPartition
+
+FENCE_MODES = ("buffer", "barrier")
 
 
 @dataclass
 class AccelStep:
     """One finalized accelerator segment: a single encoded task-ISA stream
-    any execution backend can run."""
+    any execution backend can run.  ``staged_addr`` is the stream's
+    pre-staged DRAM address (-1 = not pre-staged); ``fence_edges`` are the
+    (producer_node, consumer_node) pairs joined by a buffer fence."""
     stream: np.ndarray
     insn_count: int
     n_barriers: int
     n_drains: int
     node_ids: Tuple[int, ...]
+    n_fences: int = 0
+    fence_edges: Tuple[Tuple[int, int], ...] = ()
+    staged_addr: int = -1
 
 
 @dataclass
@@ -67,20 +85,28 @@ def _largest_gap(depth: int, taken: Sequence[Tuple[int, int]]) -> Tuple[int, int
 
 class SegmentBuilder:
     """Accumulates lowered ops into one instruction stream, deciding per op
-    whether it can overlap the ops still in flight (liveness) or needs a
-    token fence first."""
+    whether it can overlap the ops still in flight (liveness), ride a
+    buffer fence off a producer, or needs a full barrier first."""
 
-    def __init__(self, rt: Runtime):
+    def __init__(self, rt: Runtime, fence_mode: str = "buffer"):
+        if fence_mode not in FENCE_MODES:
+            raise ValueError(f"fence_mode {fence_mode!r} not in {FENCE_MODES}")
         self.rt = rt
-        self.live: List[Tuple[SramPartition, int]] = []  # (partition, out)
+        self.fence_mode = fence_mode
+        # (partition, out_addr, node_id) per op still in flight
+        self.live: List[Tuple[SramPartition, int, int]] = []
         self.n_barriers = 0
         self.n_drains = 0
+        self.n_fences = 0
         self.node_ids: List[int] = []
+        self.fence_edges: List[Tuple[int, int]] = []
 
     # ------------------------------------------------------------------
-    def _gap_partition(self) -> Optional[SramPartition]:
+    def _gap_partition(self, parts: Optional[Sequence[SramPartition]] = None
+                       ) -> Optional[SramPartition]:
         spec = self.rt.spec
-        parts = [p for p, _ in self.live]
+        if parts is None:
+            parts = [p for p, _, _ in self.live]
         gi = _largest_gap(spec.inp_depth, [(p.inp_base, p.inp_depth)
                                            for p in parts])
         gw = _largest_gap(spec.wgt_depth, [(p.wgt_base, p.wgt_depth)
@@ -96,21 +122,60 @@ class SegmentBuilder:
         return SramPartition(0, spec.inp_depth // 2, 0, spec.wgt_depth // 2,
                              0, spec.acc_depth // 2)
 
+    @staticmethod
+    def _wgt_hedged(spec) -> SramPartition:
+        """Full inp/acc, first half of the weight buffer: what a producer
+        takes when its *successor depends on it* in fence mode, so the
+        successor can pre-stage its first weight tile into the other half
+        while this op's store tail drains (cross-boundary
+        double-buffering of the weight scratchpad)."""
+        return SramPartition(0, spec.inp_depth, 0, spec.wgt_depth // 2,
+                             0, spec.acc_depth)
+
+    def _wgt_gap_partition(self, parts: Sequence[SramPartition]
+                           ) -> Optional[SramPartition]:
+        """Full inp/acc plus the largest free weight-buffer interval not
+        claimed by `parts` — the fenced consumer's partition.  Only the
+        weight region must be disjoint from the retiring producers: the
+        consumer's single pre-fence instruction is its first weight-tile
+        load, while its inp/acc traffic is ordered behind the fence token
+        (load queue) or the fence noops (compute queue)."""
+        spec = self.rt.spec
+        gw = _largest_gap(spec.wgt_depth, [(p.wgt_base, p.wgt_depth)
+                                           for p in parts])
+        if gw[1] == 0:
+            return None
+        return SramPartition(0, spec.inp_depth, gw[0], gw[1],
+                             0, spec.acc_depth)
+
     # ------------------------------------------------------------------
-    def place(self, node_id: int, *, reads: Set[int], out_addr: int,
-              lower: Callable[[SramPartition], None],
-              wants_overlap: bool = False) -> None:
+    def place(self, node_id: int, *, reads: Set[int],
+              out_alloc: Callable[[bool], int],
+              lower: Callable[..., None],
+              wants_overlap: bool = False,
+              succ_dependent: bool = False,
+              uses_load_queue: bool = True) -> None:
         """Emit one op into the open stream.
 
         reads: DRAM buffer addresses produced by earlier ops (graph inputs
         are excluded — they are staged before the stream runs and cannot
-        race with it).  lower(sram) must choose its tiles *before* emitting
-        any instruction and raise ValueError if the partition is too small,
-        so a failed attempt leaves the stream unchanged."""
+        race with it).  out_alloc(sync) assigns the op's output DRAM
+        buffer and returns its address; sync=True is passed exactly when a
+        fence/barrier orders this op's stores after every earlier op's
+        loads, so the arena may recycle dead intermediates.  lower(sram,
+        fenced=...) must choose its tiles *before* emitting any
+        instruction and raise ValueError if the partition is too small, so
+        a failed attempt leaves the stream unchanged.  succ_dependent
+        marks ops whose in-segment successor reads their output: in fence
+        mode they hedge half the weight buffer so the successor's first
+        weight tile can pre-stage into the other half.  uses_load_queue is
+        False for ops whose operand traffic rides the compute queue (ACC
+        loads, e.g. vector binops): compute-FIFO order behind the fence
+        noops already serializes them, no c2l token needed."""
         rt = self.rt
         spec = rt.spec
         self.node_ids.append(node_id)
-        live_outs = {a for _, a in self.live}
+        live_outs = {a for _, a, _ in self.live}
         if not (reads & live_outs):
             if self.live:
                 part = self._gap_partition()
@@ -120,8 +185,9 @@ class SegmentBuilder:
                         # tokens must not alias this op's own pairing
                         rt.drain_dep_tokens()
                         self.n_drains += 1
-                        lower(part)
-                        self.live.append((part, out_addr))
+                        out = out_alloc(False)
+                        lower(part, fenced=False)
+                        self.live.append((part, out, node_id))
                         return
                     except ValueError:
                         pass  # minimum tile does not fit the gap
@@ -130,39 +196,110 @@ class SegmentBuilder:
                 # scratchpad so the independent successor has a region
                 part = self._half_partition(spec)
                 try:
-                    lower(part)
-                    self.live.append((part, out_addr))
+                    out = out_alloc(False)
+                    lower(part, fenced=False)
+                    self.live.append((part, out, node_id))
                     return
                 except ValueError:
                     pass
             else:
+                out = out_alloc(False)
+                if self.fence_mode == "buffer" and succ_dependent:
+                    try:
+                        part = self._wgt_hedged(spec)
+                        lower(part, fenced=False)
+                        self.live.append((part, out, node_id))
+                        return
+                    except ValueError:
+                        pass  # does not fit half the wgt buffer
                 part = SramPartition.full(spec)
-                lower(part)
-                self.live.append((part, out_addr))
+                lower(part, fenced=False)
+                self.live.append((part, out, node_id))
                 return
-        # dependent op, or no usable disjoint region: full rendezvous,
-        # then the whole scratchpad is ours again
-        if len(rt.stream):
+        # dependent op, or no usable disjoint region
+        if self.fence_mode == "buffer" and rt.stream_len:
+            self._place_fenced(node_id, reads, out_alloc, lower,
+                               uses_load_queue, succ_dependent)
+            return
+        # full rendezvous; the whole scratchpad is ours again
+        if rt.stream_len:
             rt.join_barrier()
             self.n_barriers += 1
-        self.live = []
         part = SramPartition.full(spec)
-        lower(part)
-        self.live.append((part, out_addr))
+        out = out_alloc(True)
+        lower(part, fenced=False)
+        self.live = [(part, out, node_id)]
+
+    # ------------------------------------------------------------------
+    def _place_fenced(self, node_id: int, reads: Set[int],
+                      out_alloc: Callable[[bool], int],
+                      lower: Callable[..., None],
+                      uses_load_queue: bool,
+                      succ_dependent: bool = False) -> None:
+        """Dependent-op placement, fence mode: emit a buffer fence, then
+        try to lower the consumer with its weight region disjoint from
+        the retiring producers' so its first weight tile can DMA *before*
+        the fence token (overlapping the producer's epilogue and store
+        tail).  If no such region fits, the fence token gates the
+        consumer's very first load instead and it gets the full
+        scratchpad — still cheaper than a barrier (stores never gated, no
+        load/compute rendezvous)."""
+        rt = self.rt
+        self.fence_edges.extend(
+            (nid, node_id) for _, a, nid in self.live if a in reads)
+        rt.buffer_fence(consumer_loads=uses_load_queue)
+        self.n_fences += 1
+        old_parts = [p for p, _, _ in self.live]
+        self.live = []
+        out = out_alloc(True)
+        if uses_load_queue and old_parts:
+            part = self._wgt_gap_partition(old_parts)
+            if part is not None:
+                try:
+                    lower(part, fenced=True)
+                    self.live = [(part, out, node_id)]
+                    return
+                except ValueError:
+                    pass  # minimum tile does not fit the gap
+        if uses_load_queue:
+            # no preload region: claim the fence token on the very first
+            # load (whatever it is) — everything after it is ordered
+            rt.dep_pop(COMPUTE_Q, LOAD_Q)
+        if succ_dependent:
+            try:
+                part = self._wgt_hedged(rt.spec)
+                lower(part, fenced=False)
+                self.live = [(part, out, node_id)]
+                return
+            except ValueError:
+                pass  # does not fit half the wgt buffer
+        part = SramPartition.full(rt.spec)
+        try:
+            lower(part, fenced=False)
+        except ValueError:
+            # full-scratchpad lowering failed (op genuinely does not
+            # fit); leave no dangling fence pop behind
+            rt.clear_pending_pop(LOAD_Q)
+            raise
+        self.live = [(part, out, node_id)]
 
     # ------------------------------------------------------------------
     def finish(self) -> Optional[AccelStep]:
         """Finalize the open stream (FINISH + static token validation +
         binary encoding) into an AccelStep; None if nothing was emitted."""
-        if not len(self.rt.stream):
+        if not self.rt.stream_len:
             return None
         stream = self.rt.finalize_stream()
         step = AccelStep(stream=stream, insn_count=stream.shape[0],
                          n_barriers=self.n_barriers, n_drains=self.n_drains,
+                         n_fences=self.n_fences,
+                         fence_edges=tuple(self.fence_edges),
                          node_ids=tuple(self.node_ids))
         self.rt.reset_stream()
         self.live = []
         self.n_barriers = 0
         self.n_drains = 0
+        self.n_fences = 0
         self.node_ids = []
+        self.fence_edges = []
         return step

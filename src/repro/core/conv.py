@@ -53,7 +53,8 @@ from .hwspec import HardwareSpec
 from .isa import AluOp, IsaLayout, MemId
 from .runtime import Runtime, UopBuilder, UopKernel
 from .scheduler import (Epilogue, SramPartition, _ceil_div, _ThreadDeps,
-                        interleave_virtual_threads, lower_matmul)
+                        emit_fenced_load_group, interleave_virtual_threads,
+                        lower_matmul)
 
 
 @dataclass(frozen=True)
@@ -154,9 +155,12 @@ def choose_conv_tiles(shape: ConvShape, spec: HardwareSpec,
 def lower_conv2d(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
                  shape: ConvShape, epilogue: Optional[Epilogue] = None,
                  bias_base: int = -1, virtual_threads: int = 2,
-                 sram: Optional[SramPartition] = None) -> Tuple[int, int, int]:
+                 sram: Optional[SramPartition] = None,
+                 fenced: bool = False) -> Tuple[int, int, int]:
     """Emit the direct-conv schedule into rt's open stream (element
     addresses of already-staged blocked buffers, like ``lower_matmul``).
+    ``fenced`` claims a preceding ``buffer_fence`` token on the first x
+    load, after free-running the first weight tile (see ``lower_matmul``).
     Returns the chosen (oht, ocbt, cbt) tiles."""
     spec = rt.spec
     ep = epilogue or Epilogue()
@@ -216,6 +220,7 @@ def lower_conv2d(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
             build, key=f"cvalu.{shape}.{tag}.{ocbt_c}.{oht_c}.{acc_base}.{src_base}.{s_fo}.{s_fi}")
 
     n_oh, n_oc, n_cb = _ceil_div(OH, oht), _ceil_div(OCb, ocbt), _ceil_div(Cb, cbt)
+    fence_pending = [fenced]   # claimed by the first x load emitted
 
     def tile_program(coord, t):
         """Phase generator for one (nb, oh-tile, oc-tile); see
@@ -242,19 +247,26 @@ def lower_conv2d(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
             y_pad_0 = max(0, -h_start)
             y_pad_1 = max(0, h_start + iht_c - H)
             y_size = iht_c - y_pad_0 - y_pad_1
-            for cb in range(cbt_c):
-                plane = x_base + ((nb * Cb + cb0 + cb) * H
-                                  + (h_start + y_pad_0)) * W
+
+            def load_x(cb0=cb0, cbt_c=cbt_c, y_size=y_size,
+                       y_pad_0=y_pad_0, y_pad_1=y_pad_1, h_start=h_start):
+                for cb in range(cbt_c):
+                    plane = x_base + ((nb * Cb + cb0 + cb) * H
+                                      + (h_start + y_pad_0)) * W
+                    rt.load_buffer_2d(
+                        MemId.INP, inp_base0 + cb * iht * IWp,
+                        plane, y_size=y_size, x_size=W, x_stride=W,
+                        y_pad_0=y_pad_0, y_pad_1=y_pad_1,
+                        x_pad_0=pad, x_pad_1=pad)
+
+            def load_w(cb0=cb0, cbt_c=cbt_c):
                 rt.load_buffer_2d(
-                    MemId.INP, inp_base0 + cb * iht * IWp,
-                    plane, y_size=y_size, x_size=W, x_stride=W,
-                    y_pad_0=y_pad_0, y_pad_1=y_pad_1,
-                    x_pad_0=pad, x_pad_1=pad)
-            rt.load_buffer_2d(
-                MemId.WGT, wgt_base0,
-                w_base + ((ocb0 * Cb + cb0) * KH) * KW,
-                y_size=ocbt_c, x_size=cbt_c * KH * KW,
-                x_stride=Cb * KH * KW)
+                    MemId.WGT, wgt_base0,
+                    w_base + ((ocb0 * Cb + cb0) * KH) * KW,
+                    y_size=ocbt_c, x_size=cbt_c * KH * KW,
+                    x_stride=Cb * KH * KW)
+
+            emit_fenced_load_group(rt, fence_pending, load_x, load_w)
             d.end_load_group(rt)
             yield
             # ---- compute group ----
@@ -293,8 +305,10 @@ def lower_conv2d(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
             rt.push_alu(alu_kernel(ocbt_c, oht_c, acc_base, acc_base,
                                    oht * OW, 1, "self"),
                         op=AluOp.MIN, imm=ep.clip_hi)
-        # ---- store: one 2D store per output-channel block ----
+        # ---- store: one 2D store per output-channel block (own phase so
+        # peer tiles are fully recorded at the group's first store) ----
         d.compute_to_store(rt, own_insn=ep.n_alu_passes > 0)
+        yield
         d.begin_store(rt)
         for ocb in range(ocbt_c):
             rt.store_buffer_2d(
@@ -366,7 +380,8 @@ def select_conv_lowering(shape: ConvShape, spec: HardwareSpec,
 def lower_conv1x1(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
                   shape: ConvShape, epilogue: Optional[Epilogue] = None,
                   bias_base: int = -1, virtual_threads: int = 2,
-                  sram: Optional[SramPartition] = None) -> None:
+                  sram: Optional[SramPartition] = None,
+                  fenced: bool = False) -> None:
     """1x1-conv fast path: lower through the transposed GEMM schedule so
     these nodes hit the Pallas GEMM fast path (ResNet C3/C8/C11-style
     pointwise layers).  The blocked conv activation/weight/output buffers
@@ -391,7 +406,8 @@ def lower_conv1x1(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
                      Mb=HW, Nb=OCb, Kb=Cb,
                      epilogue=epilogue, bias_base=bias_base,
                      virtual_threads=virtual_threads, sram=sram,
-                     transposed=True)
+                     transposed=True,
+                     fenced=fenced and nb == 0)
 
 
 def choose_im2col_tiles(shape: ConvShape, spec: HardwareSpec,
@@ -444,8 +460,8 @@ def choose_im2col_tiles(shape: ConvShape, spec: HardwareSpec,
 def lower_conv_im2col(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
                       shape: ConvShape, epilogue: Optional[Epilogue] = None,
                       bias_base: int = -1, virtual_threads: int = 2,
-                      sram: Optional[SramPartition] = None
-                      ) -> Tuple[int, int, int]:
+                      sram: Optional[SramPartition] = None,
+                      fenced: bool = False) -> Tuple[int, int, int]:
     """im2col-in-SRAM lowering: gather the K-major im2col tile with one 2D
     padded DMA per (icb, kh, kw) row, then run ``lower_matmul``'s
     transposed-mode GEMM/epilogue/store structure over it — a single
@@ -510,6 +526,7 @@ def lower_conv_im2col(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
 
     n_oh, n_oc, n_cb = _ceil_div(OH, oht), _ceil_div(OCb, ocbt), \
         _ceil_div(Cb, cbt)
+    fence_pending = [fenced]   # claimed by the first gather load emitted
 
     def tile_program(coord, t):
         nb, ot, jt = coord
@@ -531,30 +548,38 @@ def lower_conv_im2col(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
             ktt = cbt_c * KH * KW
             # ---- load group: the im2col gather (one DMA per k-row) ----
             d.begin_load_group(rt)
-            for cb in range(cbt_c):
-                plane = x_base + (nb * Cb + cb0 + cb) * H * W
-                for kh in range(KH):
-                    row0 = oh0 + kh - pad           # stride==1: oh walks h
-                    y_pad_0 = min(oht_c, max(0, -row0))
-                    y_pad_1 = min(oht_c - y_pad_0,
-                                  max(0, row0 + oht_c - H))
-                    y_size = oht_c - y_pad_0 - y_pad_1
-                    for kw in range(KW):
-                        col0 = kw - pad
-                        x_pad_0 = min(OW, max(0, -col0))
-                        x_pad_1 = min(OW - x_pad_0, max(0, col0 + OW - W))
-                        k_local = (cb * KH + kh) * KW + kw
-                        rt.load_buffer_2d(
-                            MemId.INP, inp_base0 + k_local * mtt,
-                            plane + (row0 + y_pad_0) * W + (col0 + x_pad_0),
-                            y_size=y_size,
-                            x_size=OW - x_pad_0 - x_pad_1, x_stride=W,
-                            y_pad_0=y_pad_0, y_pad_1=y_pad_1,
-                            x_pad_0=x_pad_0, x_pad_1=x_pad_1)
-            rt.load_buffer_2d(
-                MemId.WGT, wgt_base0,
-                w_base + ocb0 * Kfull + cb0 * KH * KW,
-                y_size=ocbt_c, x_size=ktt, x_stride=Kfull)
+
+            def load_x(cb0=cb0, cbt_c=cbt_c, oht_c=oht_c, mtt=mtt, oh0=oh0):
+                for cb in range(cbt_c):
+                    plane = x_base + (nb * Cb + cb0 + cb) * H * W
+                    for kh in range(KH):
+                        row0 = oh0 + kh - pad       # stride==1: oh walks h
+                        y_pad_0 = min(oht_c, max(0, -row0))
+                        y_pad_1 = min(oht_c - y_pad_0,
+                                      max(0, row0 + oht_c - H))
+                        y_size = oht_c - y_pad_0 - y_pad_1
+                        for kw in range(KW):
+                            col0 = kw - pad
+                            x_pad_0 = min(OW, max(0, -col0))
+                            x_pad_1 = min(OW - x_pad_0,
+                                          max(0, col0 + OW - W))
+                            k_local = (cb * KH + kh) * KW + kw
+                            rt.load_buffer_2d(
+                                MemId.INP, inp_base0 + k_local * mtt,
+                                plane + (row0 + y_pad_0) * W
+                                + (col0 + x_pad_0),
+                                y_size=y_size,
+                                x_size=OW - x_pad_0 - x_pad_1, x_stride=W,
+                                y_pad_0=y_pad_0, y_pad_1=y_pad_1,
+                                x_pad_0=x_pad_0, x_pad_1=x_pad_1)
+
+            def load_w(cb0=cb0, ktt=ktt):
+                rt.load_buffer_2d(
+                    MemId.WGT, wgt_base0,
+                    w_base + ocb0 * Kfull + cb0 * KH * KW,
+                    y_size=ocbt_c, x_size=ktt, x_stride=Kfull)
+
+            emit_fenced_load_group(rt, fence_pending, load_x, load_w)
             d.end_load_group(rt)
             yield
             # ---- compute group ----
@@ -591,8 +616,10 @@ def lower_conv_im2col(rt: Runtime, *, x_base: int, w_base: int, y_base: int,
             rt.push_alu(alu_kernel(mtt, ocbt_c, acc_base, acc_base,
                                    1, mtt, "self"),
                         op=AluOp.MIN, imm=ep.clip_hi)
-        # ---- store: one 2D store, rows = output-channel blocks ----
+        # ---- store: one 2D store, rows = output-channel blocks (own
+        # phase so peer tiles are fully recorded at the group's store) ----
         d.compute_to_store(rt, own_insn=ep.n_alu_passes > 0)
+        yield
         d.begin_store(rt)
         rt.store_buffer_2d(
             acc_base,

@@ -124,10 +124,16 @@ class Device:
         performs before running to FINISH.  Returns the stream address."""
         addr = self.dram.alloc(stream.nbytes)
         self.dram.write(addr, stream)
-        self.regs.insns = addr
-        self.regs.insn_count = stream.shape[0]
-        self.regs.start()
+        self.kick_stream(addr, stream.shape[0])
         return addr
+
+    def kick_stream(self, addr: int, insn_count: int) -> None:
+        """Point the fetch registers at an ALREADY-staged instruction
+        stream and start the engine — the repeat-call handshake of a
+        pre-staged CompiledProgram (zero per-call DRAM allocation)."""
+        self.regs.insns = addr
+        self.regs.insn_count = insn_count
+        self.regs.start()
 
     # non-coherent-SoC cache maintenance hooks (§3.2)
     def flush_cache(self, addr: int, nbytes: int) -> None:

@@ -157,6 +157,33 @@ def pynq_batch2() -> HardwareSpec:
     return HardwareSpec(batch=2, freq_mhz=200.0)
 
 
+# DMA/compute constants fitted against MEASURED Pallas kernel times by
+# ``benchmarks.bench_kernels.fit_timing_constants`` (dev container, jax
+# 0.4.37 CPU interpret mode, 2026-08): the pynq-template GEMM intrinsic
+# sustains ~2.8 GMAC/s through the interpreted kernel (-> ~11 MHz
+# effective at 256 MACs/cycle) and the simulated-DRAM memcpy path moves
+# ~7 GB/s (-> ~650 B/cycle, ~37 cycles fixed setup).  Re-run the fit on
+# new hardware (real TPU: orders of magnitude higher) and pass the result
+# to ``calibrated``; these recorded values make RunStats.total_cycles
+# predict interpret-mode wall-clock within a small factor on CI.
+HOST_FIT = dict(freq_mhz=11.0,
+                dram_rd_bytes_per_cycle=650.0,
+                dram_wr_bytes_per_cycle=650.0,
+                dram_latency_cycles=37)
+
+
+def calibrated(base: HardwareSpec | None = None,
+               fit: dict | None = None) -> HardwareSpec:
+    """Template instance whose TimingModel constants are calibrated
+    against measured Pallas kernel times, so ``RunStats.total_cycles`` is
+    meaningful (predicts wall-clock) on BOTH engines — the simulator
+    prices the stream with them directly, and ``PallasBackend`` replays
+    the same TimingModel when given one.  Defaults to ``HOST_FIT`` (the
+    recorded dev-container fit); pass the output of
+    ``benchmarks.bench_kernels.fit_timing_constants()`` for this host."""
+    return (base or pynq()).replace(**(fit or HOST_FIT))
+
+
 def tpu_like() -> HardwareSpec:
     """A TPU-v5e-flavoured instance of the template: MXU-shaped intrinsic
     (128x128), VMEM-scale buffers.  Used by the kernels' static VMEM

@@ -16,12 +16,21 @@ module is that module-level JIT for the port:
     out = compiled(backend="pallas", x=..., ...)   # same stream, fast path
 
 ``compile()`` runs the whole lowering once — SRAM liveness across ops,
-cross-op WAR/RAW dependence tokens, stream segmentation around
-``cpu_only`` ops — and the result is cached by ``(spec, graph signature)``:
-a second call with new data only rebinds the DRAM input buffers and
-re-runs the already-encoded streams (the paper's JIT-cost amortization).
-Intermediate tensors chain through DRAM in their blocked layouts; no host
-relayout happens between fused ops.
+cross-op WAR/RAW dependence tokens (buffer-granular fences by default,
+``fence_mode="barrier"`` for the A/B baseline), stream segmentation
+around ``cpu_only`` ops — and the result is cached by ``(spec, graph
+signature, fence_mode, prestage)``: a second call with new data only
+rebinds the DRAM input buffers and re-runs the already-encoded streams
+(the paper's JIT-cost amortization).  Intermediate tensors chain through
+DRAM in their blocked layouts; no host relayout happens between fused
+ops.
+
+The compiled artifact is serving-oriented: encoded streams and
+``Program.constant`` (weight) tensors are staged into DRAM exactly once
+at compile time, and a liveness pass recycles dead intermediate buffers
+through a fixed-size arena — repeat calls perform zero DRAM allocation,
+so the memory image stays constant across arbitrarily long serving loops
+(counter-tested).
 """
 from __future__ import annotations
 
@@ -168,6 +177,7 @@ class Node:
     declared_dtype: str = "int8"
     fn: Optional[Callable] = None
     fn_key: Optional[str] = None   # stable cache key for host fns
+    const: Optional[np.ndarray] = None  # graph constant: staged at compile
 
 
 def _epilogue_sig(ep: Optional[Epilogue]):
@@ -231,6 +241,22 @@ class Program:
               dtype: str = "int8") -> TensorRef:
         return self._add(Node(idx=len(self.nodes), op="input", name=name,
                               shape=tuple(shape), declared_dtype=dtype))
+
+    def constant(self, name: str, value: np.ndarray,
+                 dtype: Optional[str] = None) -> TensorRef:
+        """Graph-constant input (weights, lookup tables): packed and
+        staged into DRAM once at compile time.  Calls neither pass nor
+        re-pack it — the serving fast path pays zero per-call staging for
+        constants.  The value participates in the compile-cache signature
+        (content hash)."""
+        arr = np.asarray(value)
+        if dtype is None:
+            dtype = "int32" if arr.dtype == np.int32 else "int8"
+        arr = arr.astype(np.int32 if dtype == "int32" else np.int8,
+                         copy=False)
+        return self._add(Node(idx=len(self.nodes), op="input", name=name,
+                              shape=tuple(arr.shape), declared_dtype=dtype,
+                              const=arr))
 
     def matmul(self, a: TensorRef, w: TensorRef,
                epilogue: Optional[Epilogue] = None,
@@ -365,26 +391,43 @@ class Program:
         for n in self.nodes:
             if n.op == "cpu" and n.fn_key is None:
                 return None
+            const_sig = None
+            if n.const is not None:
+                const_sig = hashlib.sha1(
+                    np.ascontiguousarray(n.const).tobytes()).hexdigest()
             rows.append((n.op, n.name, n.inputs, n.shape,
                          n.meta, _epilogue_sig(n.epilogue), n.conv,
-                         n.alu_op, n.lowering, n.fn_key))
+                         n.alu_op, n.lowering, n.fn_key, const_sig))
         return (self.spec, self.virtual_threads, tuple(rows),
                 tuple(self._outputs))
 
-    def compile(self, use_cache: bool = True) -> "CompiledProgram":
+    def compile(self, use_cache: bool = True, fence_mode: str = "buffer",
+                prestage: bool = True) -> "CompiledProgram":
+        """Lower the graph into encoded stream segments.
+
+        fence_mode: "buffer" (default) separates dependent ops with
+        buffer-granular fences (only the consumer's loads of the produced
+        buffer wait on the producer's final store — dependent layers
+        double-buffer across the op boundary); "barrier" keeps the full
+        join_barrier rendezvous as the A/B baseline.  prestage: stage the
+        encoded streams into DRAM at compile time so repeat calls perform
+        zero DRAM allocation (False re-stages per call — the pre-PR
+        behavior, kept for A/B benchmarking)."""
         sig = self.signature()
-        if use_cache and sig is not None and sig in _COMPILE_CACHE:
-            return _COMPILE_CACHE[sig]
-        compiled = _build(self)
-        if use_cache and sig is not None:
-            _COMPILE_CACHE[sig] = compiled
+        key = None if sig is None else (sig, fence_mode, prestage)
+        if use_cache and key is not None and key in _COMPILE_CACHE:
+            return _COMPILE_CACHE[key]
+        compiled = _build(self, fence_mode=fence_mode, prestage=prestage)
+        if use_cache and key is not None:
+            _COMPILE_CACHE[key] = compiled
         return compiled
 
 
 # ----------------------------------------------------------------------
 # compilation: graph -> buffers + encoded stream segments
 # ----------------------------------------------------------------------
-def _build(prog: Program) -> "CompiledProgram":
+def _build(prog: Program, fence_mode: str = "buffer",
+           prestage: bool = True) -> "CompiledProgram":
     global STREAM_BUILDS
     spec = prog.spec
     vt = prog.virtual_threads
@@ -399,12 +442,81 @@ def _build(prog: Program) -> "CompiledProgram":
             raise ValueError("empty program")
         out_ids = [non_inputs[-1]]
 
+    # ---- DRAM liveness over intermediates (the serving arena) ----
+    # last graph-order reader of each op result; inputs and program
+    # outputs are persistent (rebound / read back every call)
+    last_use: Dict[int, int] = {}
+    for n in prog.nodes:
+        for i in n.inputs:
+            last_use[i] = n.idx
+    persistent = {n.idx for n in prog.nodes if n.op == "input"} | set(out_ids)
+    # one block per recycled buffer; a block keeps its birth size forever
+    arena_free: List[Tuple[int, int]] = []          # (size, addr)
+    pending_free: List[Tuple[int, int, int]] = []   # (last_use, size, addr)
+    arena_align = max(spec.inp_elem_bytes, spec.wgt_elem_bytes,
+                      spec.acc_elem_bytes, spec.out_elem_bytes)
+    arena = dict(bytes=0, blocks=0, reuse_hits=0, intermediates=0)
+
+    def release_dead(before_idx: int) -> None:
+        """Return blocks whose last reader precedes `before_idx` to the
+        free pool.  Only called at sync points (fence / barrier / segment
+        boundary): every earlier op's loads are ordered before any later
+        op's stores there, so recycling cannot race through DRAM."""
+        still = []
+        for lu, size, addr in pending_free:
+            if lu < before_idx:
+                arena_free.append((size, addr))
+            else:
+                still.append((lu, size, addr))
+        pending_free[:] = still
+
+    def alloc_node(n: Node, sync: bool) -> int:
+        """Assign node n's output DRAM buffer (idempotent).  sync=True
+        marks a fence/barrier/segment placement — the arena may recycle
+        dead intermediates (see release_dead)."""
+        if sync:
+            release_dead(n.idx)
+        if n.idx in addrs:
+            return addrs[n.idx]
+        nbytes = n.meta.nbytes(spec)
+        addr = None
+        if n.idx not in persistent:
+            arena["intermediates"] += 1
+            # best fit among free blocks
+            best = None
+            for bi, (size, a) in enumerate(arena_free):
+                if size >= nbytes and (best is None
+                                       or size < arena_free[best][0]):
+                    best = bi
+            if best is not None:
+                size, addr = arena_free.pop(best)
+                arena["reuse_hits"] += 1
+                pending_free.append((last_use.get(n.idx, 1 << 30),
+                                     size, addr))
+        if addr is None:
+            if n.idx in persistent:
+                addr = rt.buffer_alloc(nbytes, align=n.meta.elem_bytes(spec))
+            else:
+                addr = rt.buffer_alloc(nbytes, align=arena_align)
+                arena["bytes"] += nbytes
+                arena["blocks"] += 1
+                pending_free.append((last_use.get(n.idx, 1 << 30),
+                                     nbytes, addr))
+        addrs[n.idx] = addr
+        return addr
+
     for n in prog.nodes:
         if n.meta is None:
             raise ValueError(f"input {n.name!r} is never consumed — "
                              "its DRAM layout is undetermined")
-        addrs[n.idx] = rt.buffer_alloc(n.meta.nbytes(spec),
-                                       align=n.meta.elem_bytes(spec))
+        if n.op == "input":
+            addrs[n.idx] = rt.buffer_alloc(n.meta.nbytes(spec),
+                                           align=n.meta.elem_bytes(spec))
+            if n.const is not None:
+                # constants are staged exactly once, at compile time
+                packed = n.meta.pack(n.const, spec)
+                rt.device.dram.write(addrs[n.idx], packed)
+                rt.device.flush_cache(addrs[n.idx], packed.nbytes)
 
     def elem(nid: int) -> int:
         n = prog.nodes[nid]
@@ -435,19 +547,20 @@ def _build(prog: Program) -> "CompiledProgram":
                 next_in_segment[prev_accel.idx] = n
             prev_accel = n
 
-    def make_lower(n: Node) -> Callable[[SramPartition], None]:
+    def make_lower(n: Node) -> Callable[..., None]:
         if n.op == "matmul":
             a, w = (prog.nodes[i] for i in n.inputs)
             Mb = _ceil_div(a.shape[0], spec.batch)
             Kb = _ceil_div(a.shape[1], spec.block_in)
             Nb = _ceil_div(w.shape[0], spec.block_out)
 
-            def lower(sram, n=n, a=a, w=w, Mb=Mb, Nb=Nb, Kb=Kb):
+            def lower(sram, fenced=False, n=n, a=a, w=w, Mb=Mb, Nb=Nb,
+                      Kb=Kb):
                 lower_matmul(rt, a_base=elem(a.idx), w_base=elem(w.idx),
                              c_base=elem(n.idx), Mb=Mb, Nb=Nb, Kb=Kb,
                              epilogue=n.epilogue,
                              bias_base=bias_base.get(n.idx, -1),
-                             virtual_threads=vt, sram=sram)
+                             virtual_threads=vt, sram=sram, fenced=fenced)
             return lower
         if n.op == "conv2d":
             x, w = (prog.nodes[i] for i in n.inputs)
@@ -455,17 +568,17 @@ def _build(prog: Program) -> "CompiledProgram":
                  "im2col": lower_conv_im2col,
                  "direct": lower_conv2d}[n.lowering]
 
-            def lower(sram, n=n, x=x, w=w, f=f):
+            def lower(sram, fenced=False, n=n, x=x, w=w, f=f):
                 f(rt, x_base=elem(x.idx), w_base=elem(w.idx),
                   y_base=elem(n.idx), shape=n.conv, epilogue=n.epilogue,
                   bias_base=bias_base.get(n.idx, -1),
-                  virtual_threads=vt, sram=sram)
+                  virtual_threads=vt, sram=sram, fenced=fenced)
             return lower
         if n.op == "vbinop":
             a, b = (prog.nodes[i] for i in n.inputs)
             ne = n.meta.blocked_shape(spec)[0]
 
-            def lower(sram, n=n, a=a, b=b, ne=ne):
+            def lower(sram, fenced=False, n=n, a=a, b=b, ne=ne):
                 lower_vector_binop(rt, a_base=elem(a.idx), b_base=elem(b.idx),
                                    c_base=elem(n.idx), ne=ne, op=n.alu_op,
                                    sram=sram)
@@ -473,7 +586,7 @@ def _build(prog: Program) -> "CompiledProgram":
         raise ValueError(n.op)
 
     steps: List[Union[AccelStep, CpuStep]] = []
-    seg = SegmentBuilder(rt)
+    seg = SegmentBuilder(rt, fence_mode=fence_mode)
     for n in prog.nodes:
         if n.op == "input":
             continue
@@ -482,23 +595,49 @@ def _build(prog: Program) -> "CompiledProgram":
             if step is not None:
                 steps.append(step)
                 STREAM_BUILDS += 1
+            # the previous segment fully retires before the host step
+            # runs, so this is a DRAM liveness point too
+            alloc_node(n, sync=True)
             steps.append(CpuStep(node_id=n.idx))
             continue
         nxt = next_in_segment.get(n.idx)
         reads = {addrs[i] for i in n.inputs if i in op_outputs}
-        seg.place(n.idx, reads=reads, out_addr=addrs[n.idx],
+        seg.place(n.idx, reads=reads,
+                  out_alloc=lambda sync, n=n: alloc_node(n, sync),
                   lower=make_lower(n),
                   wants_overlap=(nxt is not None
-                                 and n.idx not in nxt.inputs))
+                                 and n.idx not in nxt.inputs),
+                  succ_dependent=(nxt is not None
+                                  and n.idx in nxt.inputs),
+                  uses_load_queue=(n.op != "vbinop"))
     step = seg.finish()
     if step is not None:
         steps.append(step)
         STREAM_BUILDS += 1
 
+    # ---- pre-stage the encoded streams (once, at compile time) ----
+    staged_bytes = 0
+    if prestage:
+        for st in steps:
+            if isinstance(st, AccelStep):
+                st.staged_addr = rt.device.dram.alloc(st.stream.nbytes)
+                rt.device.dram.write(st.staged_addr, st.stream)
+                rt.device.flush_cache(st.staged_addr, st.stream.nbytes)
+                staged_bytes += st.stream.nbytes
+
     input_ids = {n.name: n.idx for n in prog.nodes if n.op == "input"}
+    const_names = {n.name for n in prog.nodes
+                   if n.op == "input" and n.const is not None}
     return CompiledProgram(spec=spec, nodes=list(prog.nodes), addrs=addrs,
                            steps=steps, input_ids=input_ids,
-                           output_ids=out_ids, device=rt.device)
+                           output_ids=out_ids, device=rt.device,
+                           fence_mode=fence_mode, prestage=prestage,
+                           const_names=const_names,
+                           staged_bytes=staged_bytes,
+                           arena_bytes=arena["bytes"],
+                           arena_blocks=arena["blocks"],
+                           arena_reuse_hits=arena["reuse_hits"],
+                           n_intermediates=arena["intermediates"])
 
 
 # ----------------------------------------------------------------------
@@ -507,7 +646,9 @@ def _build(prog: Program) -> "CompiledProgram":
 @dataclass
 class CompiledProgram:
     """Encoded stream segments + bound DRAM buffers: call with new input
-    data as many times as you like — no re-scheduling happens."""
+    data as many times as you like — no re-scheduling happens, and with
+    ``prestage`` (default) no per-call DRAM allocation either: the DRAM
+    image size is constant over arbitrarily long serving loops."""
     spec: HardwareSpec
     nodes: List[Node]
     addrs: Dict[int, int]
@@ -515,7 +656,16 @@ class CompiledProgram:
     input_ids: Dict[str, int]
     output_ids: List[int]
     device: Any
+    fence_mode: str = "buffer"
+    prestage: bool = True
+    const_names: set = field(default_factory=set)
+    staged_bytes: int = 0          # encoded streams staged at compile time
+    arena_bytes: int = 0           # fresh DRAM backing the intermediate arena
+    arena_blocks: int = 0
+    arena_reuse_hits: int = 0      # intermediates served from a dead block
+    n_intermediates: int = 0
     calls: int = 0
+    last_staging_bytes: int = 0    # bytes staged by the most recent call
     last_stats: List[RunStats] = field(default_factory=list)
 
     # ---- introspection -------------------------------------------------
@@ -535,10 +685,15 @@ class CompiledProgram:
     def n_barriers(self) -> int:
         return sum(s.n_barriers for s in self.accel_steps)
 
+    @property
+    def n_fences(self) -> int:
+        return sum(s.n_fences for s in self.accel_steps)
+
     def describe(self) -> str:
         """One line per step; conv nodes carry their resolved lowering
-        mode (direct | im2col | via_matmul) so the scheduling decision is
-        inspectable without decoding the stream."""
+        mode (direct | im2col | via_matmul), fenced producer->consumer
+        edges are listed per segment, and the arena/staging summary shows
+        what the serving fast path reuses."""
         def label(i: int) -> str:
             n = self.nodes[i]
             return f"{n.name}:{n.lowering}" if n.lowering else n.name
@@ -547,18 +702,30 @@ class CompiledProgram:
         for s in self.steps:
             if isinstance(s, AccelStep):
                 names = ",".join(label(i) for i in s.node_ids)
+                edges = ""
+                if s.fence_edges:
+                    edges = " (" + ",".join(
+                        f"{self.nodes[p].name}->{self.nodes[c].name}"
+                        for p, c in s.fence_edges) + ")"
                 parts.append(f"accel[{names}: {s.insn_count} insns, "
-                             f"{s.n_barriers} barriers]")
+                             f"{s.n_barriers} barriers, "
+                             f"{s.n_fences} fences{edges}]")
             else:
                 parts.append(f"cpu[{self.nodes[s.node_id].name}]")
-        return " -> ".join(parts)
+        chain = " -> ".join(parts)
+        tail = (f" | arena {self.arena_bytes}B/{self.arena_blocks} blocks "
+                f"for {self.n_intermediates} intermediates "
+                f"({self.arena_reuse_hits} reused)"
+                f" | staged {self.staged_bytes}B")
+        return chain + tail
 
     # ---- data movement -------------------------------------------------
-    def _write(self, nid: int, arr: np.ndarray) -> None:
+    def _write(self, nid: int, arr: np.ndarray) -> int:
         node = self.nodes[nid]
         packed = node.meta.pack(arr, self.spec)
         self.device.dram.write(self.addrs[nid], packed)
         self.device.flush_cache(self.addrs[nid], packed.nbytes)
+        return packed.nbytes
 
     def _read(self, nid: int) -> np.ndarray:
         node = self.nodes[nid]
@@ -569,27 +736,41 @@ class CompiledProgram:
         return meta.unpack(blocked, self.spec)
 
     # ---- execution -----------------------------------------------------
-    def __call__(self, backend: BackendLike = None,
+    def __call__(self, backend: BackendLike = None, timing: Any = None,
                  **inputs: np.ndarray) -> Union[np.ndarray,
                                                 Dict[str, np.ndarray]]:
-        missing = set(self.input_ids) - set(inputs)
-        extra = set(inputs) - set(self.input_ids)
+        required = set(self.input_ids) - self.const_names
+        missing = required - set(inputs)
+        extra = set(inputs) - required
         if missing or extra:
             raise ValueError(f"inputs mismatch: missing {sorted(missing)}, "
                              f"unexpected {sorted(extra)}")
+        staging = 0
         for name, arr in inputs.items():
-            self._write(self.input_ids[name], arr)
+            staging += self._write(self.input_ids[name], arr)
         eng = resolve_backend(backend)
         self.calls += 1
         self.last_stats = []
         for step in self.steps:
             if isinstance(step, AccelStep):
-                self.last_stats.append(
-                    eng.execute(self.spec, self.device, step.stream))
+                if self.prestage and step.staged_addr >= 0:
+                    stats = eng.execute(self.spec, self.device, step.stream,
+                                        timing=timing,
+                                        staged_addr=step.staged_addr)
+                else:
+                    stats = eng.execute(self.spec, self.device, step.stream,
+                                        timing=timing)
+                    staging += step.stream.nbytes  # re-staged every call
+                stats.n_join_barriers = step.n_barriers
+                stats.n_buffer_fences = step.n_fences
+                self.last_stats.append(stats)
             else:
                 node = self.nodes[step.node_id]
                 args = [self._read(i) for i in node.inputs]
                 self._write(step.node_id, node.fn(*args))
+        self.last_staging_bytes = staging
+        for s in self.last_stats:
+            s.staging_bytes_per_call = staging
         outs = {self.nodes[i].name: self._read(i) for i in self.output_ids}
         if len(outs) == 1:
             return next(iter(outs.values()))

@@ -224,6 +224,20 @@ class Runtime:
                     bal[fifo] += 1
         return bal
 
+    # dependence FIFO -> (producer queue, consumer queue); the consumer
+    # queue is where a drain noop must live to pop the token
+    _FIFO_EDGE = {"c2l": (COMPUTE_Q, LOAD_Q), "c2s": (COMPUTE_Q, STORE_Q),
+                  "l2c": (LOAD_Q, COMPUTE_Q), "s2c": (STORE_Q, COMPUTE_Q)}
+
+    def _drain_fifo(self, fifo: str, count: int) -> None:
+        """Consume `count` tokens from one dependence FIFO on noops of
+        its consumer queue — the stale-token-pairing primitive shared by
+        drain_dep_tokens, join_barrier, and buffer_fence."""
+        from_q, to_q = self._FIFO_EDGE[fifo]
+        for _ in range(count):
+            self.dep_pop(from_q, to_q)
+            self.noop(to_q)
+
     def drain_dep_tokens(self) -> None:
         """Consume every unmatched dependence token in the four FIFOs.
 
@@ -236,18 +250,58 @@ class Runtime:
             raise RuntimeError(
                 "drain_dep_tokens called with an un-attached dep_pop pending")
         bal = self.token_balance()
-        for _ in range(bal["c2l"]):
-            self.dep_pop(COMPUTE_Q, LOAD_Q)
-            self.noop(LOAD_Q)
-        for _ in range(bal["c2s"]):
-            self.dep_pop(COMPUTE_Q, STORE_Q)
-            self.noop(STORE_Q)
-        for _ in range(bal["l2c"]):
-            self.dep_pop(LOAD_Q, COMPUTE_Q)
-            self.noop(COMPUTE_Q)
-        for _ in range(bal["s2c"]):
-            self.dep_pop(STORE_Q, COMPUTE_Q)
-            self.noop(COMPUTE_Q)
+        for fifo in ("c2l", "c2s", "l2c", "s2c"):
+            self._drain_fifo(fifo, bal[fifo])
+
+    def clear_pending_pop(self, queue: int) -> None:
+        """Cancel dep_pops registered for `queue` but not yet attached to
+        an instruction (the compiler's fence fallback path)."""
+        self._pending_pop[queue] = {}
+
+    def buffer_fence(self, consumer_loads: bool = True) -> None:
+        """Buffer-granular producer->consumer fence: the cheap alternative
+        to ``join_barrier`` for dependent ops in one composed stream.
+
+        Serializes one edge only — instructions that pop the fence token
+        wait until every STORE emitted so far has completed (the
+        producer's DRAM image is final); nothing else rendezvouses.
+        Construction::
+
+            store-noop ──s2c──> compute-noop [──c2l──> first fenced LOAD]
+
+        The store noop sits behind every producer store in the store
+        FIFO, so its s2c push publishes "all stores done"; the compute
+        noop(s) pop it — stale s2c tokens are consumed first so the FIFO
+        pairing stays aligned (tokens are information-less, see
+        ``drain_dep_tokens``).  With ``consumer_loads`` the last compute
+        noop also pushes c2l and the *caller* chooses which load pops it
+        (``dep_pop(COMPUTE_Q, LOAD_Q)`` immediately before emitting the
+        consumer's first load of the produced buffer).  Loads emitted
+        before that pop — e.g. the consumer's first weight tile — run
+        while the producer's epilogue and store tail are still draining,
+        which is what lets dependent layers double-buffer across the op
+        boundary.  Unlike ``join_barrier``, the consumer's stores are
+        never gated and no load/compute rendezvous is inserted.
+        """
+        if not self._stream:
+            return
+        if any(self._pending_pop[q] for q in self._pending_pop):
+            raise RuntimeError(
+                "buffer_fence called with an un-attached dep_pop pending")
+        bal = self.token_balance()
+        # stale WAR tokens would shift the consumer's own push/pop pairing
+        # one generation early; consume them on noops that retire as soon
+        # as their producing instruction completes
+        for fifo in ("c2l", "l2c", "c2s"):
+            self._drain_fifo(fifo, bal[fifo])
+        # the fence proper: one store noop behind every producer store...
+        self.noop(STORE_Q)
+        self.dep_push(STORE_Q, COMPUTE_Q)
+        # ...whose token the LAST of these compute noops pops (the first
+        # bal["s2c"] pops consume the producers' own trailing WAR pushes)
+        self._drain_fifo("s2c", bal["s2c"] + 1)
+        if consumer_loads:
+            self.dep_push(COMPUTE_Q, LOAD_Q)
 
     def join_barrier(self) -> None:
         """Full cross-module rendezvous: every instruction emitted after
@@ -429,6 +483,10 @@ class Runtime:
         """Append FINISH, validate token balance, and encode the stream to
         its binary task-ISA form — the single artifact every execution
         backend consumes."""
+        if any(self._pending_pop[q] for q in self._pending_pop):
+            raise ValueError(
+                "finalize_stream with un-attached dep_pop(s): a fence token "
+                "pop was registered but never claimed by an instruction")
         self._push_insn(FinishInsn(dep=DepFlags()))
         self.validate_stream()
         return self.isa.encode_stream(self._stream)
@@ -465,3 +523,8 @@ class Runtime:
     @property
     def stream(self) -> List[Insn]:
         return list(self._stream)
+
+    @property
+    def stream_len(self) -> int:
+        """O(1) pending-instruction count (the `stream` property copies)."""
+        return len(self._stream)

@@ -85,6 +85,25 @@ class _ThreadDeps:
         self.s2c_pending = True
 
 
+def emit_fenced_load_group(rt: Runtime, fence_pending: List[bool],
+                           load_data, load_weights) -> None:
+    """Emit one tile load group under the buffer-fence protocol (shared
+    by every lowering pass so the token-claim invariant lives in ONE
+    place): while the fence is unclaimed, the weight tile loads first —
+    free-running, it overlaps the producer's epilogue/store tail in its
+    disjoint wgt region — and the fence token is claimed by (gates) the
+    first load of the produced data operand; afterwards the normal
+    data-then-weights order resumes."""
+    if fence_pending[0]:
+        load_weights()
+        rt.dep_pop(COMPUTE_Q, LOAD_Q)
+        fence_pending[0] = False
+        load_data()
+    else:
+        load_data()
+        load_weights()
+
+
 # ----------------------------------------------------------------------
 # virtual-threading lowering (§4.3, Fig. 14)
 # ----------------------------------------------------------------------
@@ -254,7 +273,8 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
                  sram: Optional[SramPartition] = None,
                  transposed: bool = False,
                  a_stride: Optional[int] = None,
-                 c_stride: Optional[int] = None) -> Tuple[int, int, int]:
+                 c_stride: Optional[int] = None,
+                 fenced: bool = False) -> Tuple[int, int, int]:
     """Emit the blocked-matmul schedule into rt's open stream.
 
     This is the lowering pass behind ``schedule_matmul``: it takes
@@ -276,6 +296,14 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
     image block per element (the caller owns that interpretation — a
     batch-blocked *matrix* packed by ``pack_inp`` is row-blocked and would
     need ``transposed=False``).
+
+    ``fenced=True`` means the program compiler emitted a
+    ``Runtime.buffer_fence`` immediately before this op because operand A
+    is produced by an in-flight predecessor: the first load group stages
+    its *weight* tile first (free-running — it overlaps the producer's
+    epilogue and store tail, SRAM partitions are disjoint), then claims
+    the fence token on the first A load, which is the only instruction
+    that must wait for the producer's final store.
 
     Returns the chosen (mt, nt, kt) tile sizes.
     """
@@ -301,6 +329,7 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
 
     n_m, n_n, n_k = _ceil_div(Mb, mt), _ceil_div(Nb, nt), _ceil_div(Kb, kt)
     tp = "T" if transposed else ""
+    fence_pending = [fenced]   # claimed by the first A load emitted
 
     # JIT one GEMM micro-kernel per (tile-shape, context); LRU-cached.
     def gemm_kernel(mtt, ntt, ktt, acc_base, inp_base, wgt_base) -> UopKernel:
@@ -365,17 +394,25 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
             ktt = min(kt, Kb - kk * kt)
             # ---- load group ----
             d.begin_load_group(rt)
-            if transposed:
-                rt.load_buffer_2d(MemId.INP, inp_base0,
-                                  a_base + (kk * kt) * a_stride + i * mt,
-                                  y_size=ktt, x_size=mtt, x_stride=a_stride)
-            else:
-                rt.load_buffer_2d(MemId.INP, inp_base0,
-                                  a_base + (i * mt) * a_stride + kk * kt,
-                                  y_size=mtt, x_size=ktt, x_stride=a_stride)
-            rt.load_buffer_2d(MemId.WGT, wgt_base0,
-                              w_base + (j * nt) * Kb + kk * kt,
-                              y_size=ntt, x_size=ktt, x_stride=Kb)
+
+            def load_a(kk=kk, ktt=ktt):
+                if transposed:
+                    rt.load_buffer_2d(MemId.INP, inp_base0,
+                                      a_base + (kk * kt) * a_stride + i * mt,
+                                      y_size=ktt, x_size=mtt,
+                                      x_stride=a_stride)
+                else:
+                    rt.load_buffer_2d(MemId.INP, inp_base0,
+                                      a_base + (i * mt) * a_stride + kk * kt,
+                                      y_size=mtt, x_size=ktt,
+                                      x_stride=a_stride)
+
+            def load_w(kk=kk, ktt=ktt):
+                rt.load_buffer_2d(MemId.WGT, wgt_base0,
+                                  w_base + (j * nt) * Kb + kk * kt,
+                                  y_size=ntt, x_size=ktt, x_stride=Kb)
+
+            emit_fenced_load_group(rt, fence_pending, load_a, load_w)
             d.end_load_group(rt)
             yield
             # ---- compute group ----
@@ -413,8 +450,12 @@ def lower_matmul(rt: Runtime, *, a_base: int, w_base: int, c_base: int,
             rt.push_alu(alu_tile_kernel(mtt, ntt, acc_base, acc_base,
                                         self_fo, self_fi, "self"),
                         op=AluOp.MIN, imm=ep.clip_hi)
-        # ---- store ----
+        # ---- store (own phase: the peer thread's epilogue precedes this
+        # store in program order, so the backend's batched tile dispatch
+        # sees every peer tile fully recorded at the group's first store;
+        # per-queue FIFO order — hence execution and timing — unchanged)
         d.compute_to_store(rt, own_insn=ep.n_alu_passes > 0)
+        yield
         d.begin_store(rt)
         if transposed:
             rt.store_buffer_2d(acc_base,
@@ -525,7 +566,7 @@ def lower_vector_binop(rt: Runtime, *, a_base: int, b_base: int, c_base: int,
         raise ValueError(f"acc partition depth {sram.acc_depth} cannot "
                          "double-buffer even one vector element")
     acc0 = sram.acc_base
-    stream_start = len(rt.stream)   # validate only this schedule's suffix
+    stream_start = rt.stream_len   # validate only this schedule's suffix
     done = 0
     while done < ne:
         cur = min(cap, ne - done)

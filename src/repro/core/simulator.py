@@ -106,6 +106,19 @@ class RunStats:
     coalesced_alu_insns: int = 0
     eager_gemm_insns: int = 0
     eager_alu_insns: int = 0
+    # program-compiler pipelining + serving-path accounting, filled in by
+    # CompiledProgram.__call__ per accelerator step: how the stream's
+    # dependent-op boundaries were synchronized and how many bytes the
+    # call staged into DRAM (inputs; + the stream itself when not
+    # pre-staged)
+    n_join_barriers: int = 0
+    n_buffer_fences: int = 0
+    staging_bytes_per_call: int = 0
+    # PallasBackend batched tile dispatch: lazily-coalesced accumulator
+    # tiles resolved, and the number of kernel launches that resolved
+    # them (tiles_resolved / tile_batches = batching factor)
+    tiles_resolved: int = 0
+    tile_batches: int = 0
 
     @property
     def eager_compute_insns(self) -> int:
@@ -137,6 +150,111 @@ class RunStats:
 # the engine
 # ----------------------------------------------------------------------
 _MODULE_NAMES = {LOAD_Q: "load", COMPUTE_Q: "compute", STORE_Q: "store"}
+
+
+def _pipeline_schedule(spec: HardwareSpec, insns: List["Insn"],
+                       timing: TimingModel,
+                       commit=None) -> RunStats:
+    """The three-module decoupled-pipeline scheduler (§2.3): each module
+    consumes its command queue in FIFO order, predicated on the four
+    dependence-token FIFOs; latencies come from `timing`.  `commit` (when
+    given) applies each instruction's memory semantics — the behavioral
+    simulator; with commit=None this is a pure cycle-accounting replay,
+    which is how the Pallas engine prices the exact same stream with the
+    same TimingModel (see ``replay_timing``)."""
+    queues: Dict[int, List[Insn]] = {LOAD_Q: [], COMPUTE_Q: [], STORE_Q: []}
+    for insn in insns:
+        queues[route_queue(insn)].append(insn)
+
+    # dependence token FIFOs (timestamps of pushes)
+    l2c: List[int] = []   # RAW  load -> compute
+    c2l: List[int] = []   # WAR  compute -> load
+    c2s: List[int] = []   # RAW  compute -> store
+    s2c: List[int] = []   # WAR  store -> compute
+
+    def in_queues(q: int) -> List[Tuple[List[int], str]]:
+        if q == LOAD_Q:
+            return [(c2l, "pop_next")]
+        if q == COMPUTE_Q:
+            return [(l2c, "pop_prev"), (s2c, "pop_next")]
+        return [(c2s, "pop_prev")]
+
+    def out_queues(q: int) -> Dict[str, List[int]]:
+        if q == LOAD_Q:
+            return {"push_next": l2c}
+        if q == COMPUTE_Q:
+            return {"push_prev": c2l, "push_next": c2s}
+        return {"push_prev": s2c}
+
+    pc = {LOAD_Q: 0, COMPUTE_Q: 0, STORE_Q: 0}
+    free_at = {LOAD_Q: 0, COMPUTE_Q: 0, STORE_Q: 0}
+    stats = RunStats(modules={n: ModuleStats() for n in _MODULE_NAMES.values()})
+
+    while True:
+        # find, among modules with pending work, the one that can start
+        # earliest (tokens available), and commit its instruction.
+        best_q, best_start, best_insn = None, None, None
+        all_done = True
+        for q in (LOAD_Q, COMPUTE_Q, STORE_Q):
+            if pc[q] >= len(queues[q]):
+                continue
+            all_done = False
+            insn = queues[q][pc[q]]
+            start = free_at[q]
+            ok = True
+            for fifo, flag in in_queues(q):
+                if getattr(insn.dep, flag):
+                    if not fifo:
+                        ok = False
+                        break
+                    start = max(start, fifo[0])
+            if not ok:
+                continue
+            if best_start is None or start < best_start:
+                best_q, best_start, best_insn = q, start, insn
+        if all_done:
+            break
+        if best_q is None:
+            state = {(_MODULE_NAMES[q]): f"{pc[q]}/{len(queues[q])}"
+                     for q in pc}
+            raise DeadlockError(
+                f"dependence deadlock: no module can issue; pcs={state} "
+                f"tokens l2c={len(l2c)} c2l={len(c2l)} c2s={len(c2s)} s2c={len(s2c)}")
+
+        q, insn = best_q, best_insn
+        # consume tokens
+        for fifo, flag in in_queues(q):
+            if getattr(insn.dep, flag):
+                fifo.pop(0)
+        lat = timing.latency(insn, spec)
+        finish = best_start + lat
+        mstats = stats.modules[_MODULE_NAMES[q]]
+        mstats.stall_on_token += best_start - free_at[q]
+        mstats.busy_cycles += lat
+        mstats.insn_count += 1
+        free_at[q] = finish
+        pc[q] += 1
+
+        if commit is not None:
+            commit(insn, stats)
+
+        # publish outgoing tokens at completion time
+        for flag, fifo in out_queues(q).items():
+            if getattr(insn.dep, flag):
+                fifo.append(finish)
+                stats.tokens_pushed += 1
+
+    stats.total_cycles = max(free_at.values())
+    return stats
+
+
+def replay_timing(spec: HardwareSpec, insns: List["Insn"],
+                  timing: Optional[TimingModel] = None) -> RunStats:
+    """Cycle-account an instruction list on the pipeline model without
+    executing memory semantics — gives any engine (e.g. PallasBackend)
+    TimingModel cycles for the exact stream it ran."""
+    return _pipeline_schedule(spec, insns, timing or TimingModel(spec),
+                              commit=None)
 
 
 class Simulator:
@@ -173,89 +291,8 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def _execute(self, insns: List[Insn]) -> RunStats:
-        queues: Dict[int, List[Insn]] = {LOAD_Q: [], COMPUTE_Q: [], STORE_Q: []}
-        for insn in insns:
-            queues[route_queue(insn)].append(insn)
-
-        # dependence token FIFOs (timestamps of pushes)
-        l2c: List[int] = []   # RAW  load -> compute
-        c2l: List[int] = []   # WAR  compute -> load
-        c2s: List[int] = []   # RAW  compute -> store
-        s2c: List[int] = []   # WAR  store -> compute
-
-        def in_queues(q: int) -> List[Tuple[List[int], str]]:
-            if q == LOAD_Q:
-                return [(c2l, "pop_next")]
-            if q == COMPUTE_Q:
-                return [(l2c, "pop_prev"), (s2c, "pop_next")]
-            return [(c2s, "pop_prev")]
-
-        def out_queues(q: int) -> Dict[str, List[int]]:
-            if q == LOAD_Q:
-                return {"push_next": l2c}
-            if q == COMPUTE_Q:
-                return {"push_prev": c2l, "push_next": c2s}
-            return {"push_prev": s2c}
-
-        pc = {LOAD_Q: 0, COMPUTE_Q: 0, STORE_Q: 0}
-        free_at = {LOAD_Q: 0, COMPUTE_Q: 0, STORE_Q: 0}
-        stats = RunStats(modules={n: ModuleStats() for n in _MODULE_NAMES.values()})
-
-        while True:
-            # find, among modules with pending work, the one that can start
-            # earliest (tokens available), and commit its instruction.
-            best_q, best_start, best_insn = None, None, None
-            all_done = True
-            for q in (LOAD_Q, COMPUTE_Q, STORE_Q):
-                if pc[q] >= len(queues[q]):
-                    continue
-                all_done = False
-                insn = queues[q][pc[q]]
-                start = free_at[q]
-                ok = True
-                for fifo, flag in in_queues(q):
-                    if getattr(insn.dep, flag):
-                        if not fifo:
-                            ok = False
-                            break
-                        start = max(start, fifo[0])
-                if not ok:
-                    continue
-                if best_start is None or start < best_start:
-                    best_q, best_start, best_insn = q, start, insn
-            if all_done:
-                break
-            if best_q is None:
-                state = {(_MODULE_NAMES[q]): f"{pc[q]}/{len(queues[q])}"
-                         for q in pc}
-                raise DeadlockError(
-                    f"dependence deadlock: no module can issue; pcs={state} "
-                    f"tokens l2c={len(l2c)} c2l={len(c2l)} c2s={len(c2s)} s2c={len(s2c)}")
-
-            q, insn = best_q, best_insn
-            # consume tokens
-            for fifo, flag in in_queues(q):
-                if getattr(insn.dep, flag):
-                    fifo.pop(0)
-            lat = self.timing.latency(insn, self.spec)
-            finish = best_start + lat
-            mstats = stats.modules[_MODULE_NAMES[q]]
-            mstats.stall_on_token += best_start - free_at[q]
-            mstats.busy_cycles += lat
-            mstats.insn_count += 1
-            free_at[q] = finish
-            pc[q] += 1
-
-            self._commit(insn, stats)
-
-            # publish outgoing tokens at completion time
-            for flag, fifo in out_queues(q).items():
-                if getattr(insn.dep, flag):
-                    fifo.append(finish)
-                    stats.tokens_pushed += 1
-
-        stats.total_cycles = max(free_at.values())
-        return stats
+        return _pipeline_schedule(self.spec, insns, self.timing,
+                                  commit=self._commit)
 
     # ------------------------------------------------------------------
     # instruction semantics
@@ -408,8 +445,14 @@ class Simulator:
 
 
 def run_program(spec: HardwareSpec, device: Device, stream: np.ndarray,
-                timing: Optional[TimingModel] = None) -> RunStats:
-    """Write `stream` to DRAM, kick the control regs, run to FINISH."""
-    device.stage_stream(stream)
+                timing: Optional[TimingModel] = None,
+                staged_addr: Optional[int] = None) -> RunStats:
+    """Write `stream` to DRAM (or kick a pre-staged copy at
+    `staged_addr` — zero allocation), set the control regs, run to
+    FINISH."""
+    if staged_addr is None:
+        device.stage_stream(stream)
+    else:
+        device.kick_stream(staged_addr, stream.shape[0])
     sim = Simulator(spec, device, timing=timing)
     return sim.run()

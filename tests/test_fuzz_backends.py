@@ -1,19 +1,25 @@
 """Cross-backend differential fuzzer: random Program graphs, one encoded
-stream, bit-exact DRAM images on both engines.
+stream, bit-exact DRAM images on both engines — in BOTH fence modes.
 
 The flexibility the conv-lowering modes buy (direct / im2col / via_matmul,
 batch-blocked specs, mixed epilogues) has to be paid for with systematic
-cross-configuration testing: every random graph is compiled once, each
+cross-configuration testing: every random graph is compiled twice
+(``fence_mode="buffer"`` and the ``"barrier"`` baseline), each
 accelerator segment is executed by ``CrossBackendChecker`` on cloned
-devices (SimulatorBackend as the oracle, PallasBackend as the fast path),
-and the resulting DRAM images must match byte for byte.  Outputs are also
-checked against a pure-numpy graph evaluator, so a bug that corrupted both
-engines identically would still be caught.
+devices (SimulatorBackend as the oracle, PallasBackend as the fast path)
+with host steps run in between for heterogeneous ``cpu_only`` splits, and
+the resulting DRAM images must match byte for byte per mode.  The two
+modes' outputs are then byte-diffed against each other and against a
+pure-numpy graph evaluator, so a bug that corrupted both engines — or
+both fence modes — identically would still be caught.
 
 Determinism: the generator is seeded numpy (no external dependency), so
 the CI run is reproducible — override with REPRO_FUZZ_SEED / bound the
-work with REPRO_FUZZ_GRAPHS.  When hypothesis is installed an additional
-property-based pass explores the same generator space.
+work with REPRO_FUZZ_GRAPHS.  REPRO_FUZZ_SPEC=tpu_like switches every
+graph onto the MXU-shaped template instance (the nightly job's
+configuration; CI keeps the fast pynq-scale mix).  When hypothesis is
+installed an additional property-based pass explores the same generator
+space.
 """
 import os
 
@@ -22,7 +28,7 @@ import pytest
 
 from repro.core import hwspec
 from repro.core.backend import CrossBackendChecker
-from repro.core.compiler import AccelStep
+from repro.core.compiler import AccelStep, CpuStep
 from repro.core.conv import (ConvShape, conv1x1_eligible,
                              conv_im2col_eligible, conv2d_reference)
 from repro.core.isa import AluOp
@@ -30,9 +36,14 @@ from repro.core.program import Program
 from repro.core.scheduler import Epilogue, matmul_reference
 
 FUZZ_SEED = int(os.environ.get("REPRO_FUZZ_SEED", "20260802"))
-# >= 50 graphs in CI (acceptance criterion); keep each graph tiny so the
-# eager simulator side stays fast
-FUZZ_GRAPHS = int(os.environ.get("REPRO_FUZZ_GRAPHS", "56"))
+# every graph now compiles+runs in BOTH fence modes (2 compile units per
+# graph); the default keeps tier-1 wall time near the pre-fence baseline
+# while the dedicated CI fuzz job pins REPRO_FUZZ_GRAPHS=56 (>= 50-graph
+# acceptance criterion).  Keep each graph tiny so the eager simulator
+# side stays fast.
+FUZZ_GRAPHS = int(os.environ.get("REPRO_FUZZ_GRAPHS", "36"))
+# "" = pynq-scale mix (CI); "tpu_like" = MXU-shaped template (nightly)
+FUZZ_SPEC = os.environ.get("REPRO_FUZZ_SPEC", "")
 
 _VEC_OPS = (AluOp.ADD, AluOp.MIN, AluOp.MAX, AluOp.MUL)
 
@@ -90,10 +101,18 @@ def _rand_lowering(rng, shape, spec):
     return modes[int(rng.integers(0, len(modes)))]
 
 
-def build_random_program(rng):
-    """One random accelerator-only graph + its input feeds."""
-    spec = hwspec.pynq() if rng.integers(0, 4) else \
+def _rand_spec(rng):
+    if FUZZ_SPEC == "tpu_like":
+        return hwspec.tpu_like()
+    return hwspec.pynq() if rng.integers(0, 4) else \
         hwspec.HardwareSpec(batch=2)
+
+
+def build_random_program(rng):
+    """One random graph + its input feeds (flavors: dependent matmul
+    chains, dependent conv chains with mixed lowerings, independent op
+    triples, single convs, heterogeneous cpu_only splits)."""
+    spec = _rand_spec(rng)
     vt = int(rng.integers(1, 3))
     p = Program(spec, virtual_threads=vt)
     feeds = {}
@@ -103,7 +122,7 @@ def build_random_program(rng):
         return p.input(name, shape, dtype="int8" if dtype == np.int8
                        else "int32")
 
-    flavor = rng.integers(0, 4)
+    flavor = rng.integers(0, 5)
     if flavor == 0:                      # matmul chain (join barriers)
         depth = int(rng.integers(1, 4))
         m = int(rng.integers(1, 41))
@@ -143,12 +162,28 @@ def build_random_program(rng):
             op=_VEC_OPS[int(rng.integers(0, len(_VEC_OPS)))], name="vec")
         for r in (mm, cv, vec):
             p.output(r)
-    else:                                # single conv, any shape/mode
+    elif flavor == 3:                    # single conv, any shape/mode
         s = _rand_conv_shape(rng, spec)
         p.conv2d(feed("x", (s.n, s.ic, s.h, s.w)),
                  feed("k", (s.oc, s.ic, s.kh, s.kw), lo=-16, hi=16),
                  s, epilogue=_rand_epilogue(rng, s.oc, spec),
                  lowering=_rand_lowering(rng, s, spec), name="cv")
+    else:                                # heterogeneous cpu_only split
+        depth = 3
+        cpu_pos = int(rng.integers(0, depth))
+        s = _rand_conv_shape(rng, spec)
+        t = feed("x", (s.n, s.ic, s.h, s.w))
+        for i in range(depth):
+            w = feed(f"k{i}", (s.oc, s.ic, s.kh, s.kw), lo=-16, hi=16)
+            cpu = i == cpu_pos
+            t = p.conv2d(t, w, s, epilogue=_rand_epilogue(rng, s.oc, spec),
+                         cpu_only=cpu,
+                         lowering=None if cpu
+                         else _rand_lowering(rng, s, spec),
+                         name=f"hc{i}")
+            if i + 1 < depth:
+                s = _rand_conv_shape(rng, spec, n=s.n, ic=s.oc,
+                                     h=s.oh, w=s.ow)
     return p, feeds
 
 
@@ -160,6 +195,8 @@ def evaluate_reference(p: Program, feeds):
     for n in p.nodes:
         if n.op == "input":
             vals[n.idx] = feeds[n.name]
+        elif n.op == "cpu":
+            vals[n.idx] = n.fn(*(vals[i] for i in n.inputs))
         elif n.op == "matmul":
             a, w = (vals[i] for i in n.inputs)
             vals[n.idx] = matmul_reference(a, w, epilogue=n.epilogue,
@@ -179,13 +216,19 @@ def evaluate_reference(p: Program, feeds):
 
 def cross_check(compiled, feeds):
     """Run every accelerator segment through CrossBackendChecker (cloned
-    devices, byte-diffed DRAM) and return the output tensors read from the
-    adopted simulator image."""
+    devices, byte-diffed DRAM), executing host steps in between
+    (heterogeneous cpu_only splits), and return the output tensors read
+    from the adopted simulator image."""
     for name, arr in feeds.items():
         compiled._write(compiled.input_ids[name], arr)
     checker = CrossBackendChecker()
     for step in compiled.steps:
-        assert isinstance(step, AccelStep), "fuzzer emits accel-only graphs"
+        if isinstance(step, CpuStep):
+            node = compiled.nodes[step.node_id]
+            args = [compiled._read(i) for i in node.inputs]
+            compiled._write(step.node_id, node.fn(*args))
+            continue
+        assert isinstance(step, AccelStep)
         report = checker.run(compiled.spec, compiled.device, step.stream)
         assert report.matches, (
             f"{report.mismatched_bytes} DRAM bytes differ between "
@@ -198,15 +241,22 @@ def cross_check(compiled, feeds):
 def _run_one(seed: int) -> None:
     rng = np.random.default_rng(seed)
     p, feeds = build_random_program(rng)
-    compiled = p.compile(use_cache=False)
-    outs = cross_check(compiled, feeds)
     refs = evaluate_reference(p, feeds)
-    for i in compiled.output_ids:
-        name = p.nodes[i].name
+    outs = {}
+    for fence_mode in ("buffer", "barrier"):
+        compiled = p.compile(use_cache=False, fence_mode=fence_mode)
+        outs[fence_mode] = cross_check(compiled, feeds)
+        for i in compiled.output_ids:
+            name = p.nodes[i].name
+            np.testing.assert_array_equal(
+                outs[fence_mode][name], refs[i],
+                err_msg=f"seed={seed} fence_mode={fence_mode} node={name} "
+                        f"({compiled.describe()})")
+    for name in outs["buffer"]:
         np.testing.assert_array_equal(
-            outs[name], refs[i],
-            err_msg=f"seed={seed} node={name} "
-                    f"({compiled.describe()})")
+            outs["buffer"][name], outs["barrier"][name],
+            err_msg=f"seed={seed} node={name}: fenced stream diverged "
+                    f"from the barrier baseline")
 
 
 # ----------------------------------------------------------------------

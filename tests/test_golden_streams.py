@@ -98,11 +98,7 @@ def test_streams_are_deterministic():
         np.testing.assert_array_equal(s1, s2, err_msg=name)
 
 
-def test_program_chain_barriers_and_modes():
-    """A direct conv chained into a pointwise conv compiles to ONE stream
-    with exactly one join barrier (dependent ops, scratchpad reuse), no
-    partial drains, and the per-node lowering decisions visible in
-    describe()."""
+def _conv_chain_program():
     spec = hwspec.pynq()
     p = Program(spec)
     t = p.conv2d(p.input("x", (1, 32, 14, 14)),
@@ -112,10 +108,33 @@ def test_program_chain_barriers_and_modes():
              ConvShape(n=1, h=14, w=14, ic=32, oc=32, kh=1, kw=1,
                        stride=1, pad=0),
              epilogue=Epilogue(shift=4), name="point")
-    c = p.compile(use_cache=False)
+    return p
+
+
+def test_program_chain_fences_and_modes():
+    """A direct conv chained into a pointwise conv compiles to ONE stream
+    joined by exactly one buffer fence (dependent ops), no barriers, no
+    partial drains — and the fence edge, per-node lowering decisions, and
+    serving arena/staging summary are all visible in describe()."""
+    c = _conv_chain_program().compile(use_cache=False)
+    (step,) = c.accel_steps
+    assert c.insn_count == 56
+    assert c.n_barriers == 0
+    assert c.n_fences == 1
+    assert step.fence_edges == ((2, 4),)   # body -> point
+    assert step.n_drains == 0
+    assert c.describe() == (
+        "accel[body:direct,point:via_matmul: 56 insns, 0 barriers, "
+        "1 fences (body->point)] | arena 6272B/1 blocks for "
+        "1 intermediates (0 reused) | staged 896B")
+
+
+def test_program_chain_barrier_baseline():
+    """fence_mode="barrier" keeps the PR-2 full-rendezvous lowering as
+    the A/B baseline: one join barrier, three more instructions."""
+    c = _conv_chain_program().compile(use_cache=False, fence_mode="barrier")
     (step,) = c.accel_steps
     assert c.insn_count == 59
     assert c.n_barriers == 1
+    assert c.n_fences == 0
     assert step.n_drains == 0
-    assert c.describe() == ("accel[body:direct,point:via_matmul: "
-                            "59 insns, 1 barriers]")

@@ -196,12 +196,19 @@ def test_cpu_step_splits_segments_between_independent_ops():
         np.testing.assert_array_equal(outs["v"], ref_v, err_msg=backend)
 
 
-def test_dependent_ops_get_barrier():
+def test_dependent_ops_get_fences_or_barriers():
     p, _, _ = _mlp(np.random.default_rng(4))
     compiled = p.compile(use_cache=False)
     (step,) = compiled.accel_steps
-    # each chained matmul reuses the scratchpad of its producer
-    assert step.n_barriers == 2
+    # each chained matmul rides a buffer fence off its producer...
+    assert step.n_barriers == 0
+    assert step.n_fences == 2
+    assert step.fence_edges == ((2, 4), (4, 6))
+    # ...and the barrier baseline still lowers the old way
+    baseline = p.compile(use_cache=False, fence_mode="barrier")
+    (bstep,) = baseline.accel_steps
+    assert bstep.n_barriers == 2
+    assert bstep.n_fences == 0
 
 
 def test_mixed_graph_matmul_and_vector_binop():
