@@ -263,7 +263,104 @@ def run_serving(calls: int = 100, out_json: str | None = None,
     return result
 
 
+def run_pool(requests: int = 64, out_json: str | None = None,
+             quiet: bool = False) -> dict:
+    """Pool-serving mode: one compiled artifact, N cloned pre-staged
+    devices, `requests` concurrent submits sharded by the BatchServer.
+    Measures aggregate calls/sec at pool sizes 1/2/4 on the Pallas
+    engine (pool size 1 = no gang, the serial async baseline) plus the
+    zero-per-call-DRAM invariant PER SLOT, and byte-checks every pooled
+    output against serial execution before publishing numbers.  Writes
+    ``benchmarks/BENCH_pool.json``.
+
+    The scaling lever is the gang dispatch: requests parked on the pool
+    run the identical pre-staged stream, so each kernel launch carries
+    every gang member's tiles (shared constant weights row-concat into
+    one GEMM that fills the padded row tile) — per-launch dispatch and
+    padding waste are paid once per gang instead of once per request."""
+    from repro.core.backend import PallasBackend
+    from repro.core.serve import DevicePool
+
+    spec = hwspec.pynq()
+    rng = np.random.default_rng(3)
+    ep = Epilogue(shift=6, relu=True)
+    m, d, layers = 32, 64, 2
+    ws = [rng.integers(-128, 128, size=(d, d), dtype=np.int8)
+          for _ in range(layers)]
+    prog = Program(spec)
+    t = prog.input("x", (m, d))
+    for i, w in enumerate(ws):
+        t = prog.matmul(t, prog.constant(f"w{i}", w), epilogue=ep)
+    compiled = prog.compile(use_cache=False)
+    feeds = [{"x": rng.integers(-128, 128, size=(m, d), dtype=np.int8)}
+             for _ in range(requests)]
+
+    def ref(feed):
+        r = feed["x"]
+        for w in ws:
+            r = matmul_reference(r, w, ep)
+        return r
+
+    eng = PallasBackend()
+    result = {"requests": requests,
+              "workload": f"matmul {m}x{d} -> {d}x{d} x{layers}, "
+                          f"constant weights", "pools": {}}
+    for size in (1, 2, 4):
+        with DevicePool(compiled, size=size, backend=eng,
+                        policy="least_loaded") as pool:
+            # warm: jit caches for this gang width
+            [f.wait(timeout=600) for f in
+             [pool.submit(**fd) for fd in feeds[:2 * size]]]
+            marks = [s.device.dram._next for s in pool.slots]
+            wall = float("inf")
+            for _ in range(3):                         # best-of-3
+                t0 = time.perf_counter()
+                futs = [pool.submit(**fd) for fd in feeds]
+                outs = [f.wait(timeout=600) for f in futs]
+                wall = min(wall, time.perf_counter() - t0)
+            for o, fd in zip(outs, feeds):
+                assert np.array_equal(o, ref(fd)), \
+                    "pooled output diverged from serial reference — " \
+                    "refusing to publish throughput for wrong results"
+            growth = [s.device.dram._next - m0
+                      for s, m0 in zip(pool.slots, marks)]
+            stats = pool.slot_stats()
+            result["pools"][str(size)] = dict(
+                calls_per_sec=round(requests / wall, 1),
+                wall_s=round(wall, 4),
+                dram_growth_bytes_per_slot=growth,
+                calls_per_slot=[s.calls for s in stats],
+                ganged_steps=sum(s.ganged_steps for s in stats),
+                tiles_resolved=sum(s.tiles_resolved for s in stats),
+                tile_batches=sum(s.tile_batches for s in stats),
+                exact=True)
+            assert all(g == 0 for g in growth), \
+                f"pool size {size}: per-call DRAM growth {growth}"
+    p1 = result["pools"]["1"]["calls_per_sec"]
+    p4 = result["pools"]["4"]["calls_per_sec"]
+    result["speedup_4v1_x"] = round(p4 / max(p1, 1e-9), 2)
+
+    if out_json is None:
+        out_json = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_pool.json")
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    if not quiet:
+        print(f"\npool serving ({result['workload']}, {requests} requests):")
+        for size in ("1", "2", "4"):
+            r = result["pools"][size]
+            print(f"  pool {size}: {r['calls_per_sec']:>7} calls/s, "
+                  f"{r['ganged_steps']} ganged steps, "
+                  f"{r['tiles_resolved']} tiles / {r['tile_batches']} "
+                  f"launches, DRAM growth {r['dram_growth_bytes_per_slot']}")
+        print(f"  speedup pool4 vs pool1: {result['speedup_4v1_x']}x")
+        print(f"-> {out_json}")
+    return result
+
+
 if __name__ == "__main__":
     run()
     run_conv()
     run_serving()
+    run_pool()

@@ -58,6 +58,12 @@ def main() -> None:
                     f"{prow['insns']} insns, "
                     f"x{prow['rows'][0]['speedup_x']} on sim"))
 
+    _section("Pool serving: async device pool, gang dispatch (1/2/4 slots)")
+    t0 = time.perf_counter()
+    prow = bench_program.run_pool()
+    summary.append(("pool_serving", (time.perf_counter() - t0) * 1e6,
+                    f"x{prow['speedup_4v1_x']} pool4 vs pool1"))
+
     _section("General conv2d fast path: coalesced vs eager (measured C2)")
     t0 = time.perf_counter()
     _, conv_speedup = bench_fig16_e2e.run_measured()

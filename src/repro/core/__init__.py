@@ -2,7 +2,8 @@
 scheduler, program-level JIT) as a composable package."""
 from . import backend, compiler, conv, driver, hwspec, isa  # noqa: F401
 from . import layout, microop, pipeline_model, program  # noqa: F401
-from . import quantize, runtime, scheduler, simulator, workloads  # noqa: F401
+from . import quantize, runtime, scheduler, serve, simulator  # noqa: F401
+from . import workloads  # noqa: F401
 from .backend import (CrossBackendChecker, ExecutionBackend,  # noqa: F401
                       PallasBackend, SimulatorBackend, assert_fast_path,
                       resolve_backend)
@@ -11,3 +12,4 @@ from .hwspec import HardwareSpec, pynq, pynq_batch2, tpu_like  # noqa: F401
 from .program import CompiledProgram, Program, TensorRef  # noqa: F401
 from .runtime import Runtime  # noqa: F401
 from .scheduler import Epilogue, SramPartition  # noqa: F401
+from .serve import BatchServer, DevicePool, PoolFuture, serve_batch  # noqa: F401

@@ -32,6 +32,7 @@ importing :mod:`repro.core` stays numpy-only.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Union, \
@@ -99,8 +100,12 @@ _ALU_NAMES = {AluOp.MIN: "min", AluOp.MAX: "max", AluOp.ADD: "add",
 _IN_EDGES = DEP_IN_EDGES
 _OUT_EDGES = DEP_OUT_EDGES
 
-# content-addressed decoded-stream cache (see PallasBackend._decode_cached)
+# content-addressed decoded-stream cache (see PallasBackend._decode_cached).
+# Shared across backend instances AND serving threads: the pool scheduler
+# may decode concurrently with a foreground call, so every access holds
+# _DECODE_LOCK (pop+reinsert is not atomic under concurrent eviction).
 _DECODE_CACHE: Dict[tuple, List[Insn]] = {}
+_DECODE_LOCK = threading.Lock()
 
 
 @dataclass
@@ -181,32 +186,62 @@ class PallasBackend:
         engine runs to FINISH.  With `timing`, the same TimingModel
         cycle-accounting the simulator performs is replayed over the
         decoded stream, so RunStats.total_cycles is meaningful on both
-        engines (wall_time_s stays this engine's real clock)."""
+        engines (wall_time_s stays this engine's real clock).
+
+        A single-device execute is a gang of one — every launch-batching
+        decision below is shared with :meth:`execute_gang`, so the whole
+        test suite exercises the same code path the device pool serves
+        through."""
+        return self.execute_gang(spec, [device], stream, timing=timing,
+                                 staged_addr=staged_addr)[0]
+
+    def execute_gang(self, spec: HardwareSpec, devices: Sequence[Device],
+                     stream: np.ndarray,
+                     timing: Optional[TimingModel] = None,
+                     staged_addr: Optional[int] = None) -> List[RunStats]:
+        """Run ONE encoded stream on N devices in lockstep (SPMD over a
+        device pool): the stream — hence every scheduling, coalescing and
+        materialization decision — is identical across devices; only the
+        DRAM data differs.  Each kernel launch therefore batches the
+        peer tiles of ALL gang members along the existing vmapped tile
+        axis, paying the per-launch dispatch cost once for the pool —
+        the sharded batch dispatch that makes pooled serving throughput
+        scale with pool size.  Returns one RunStats per device
+        (``gang_size`` records the gang width; ``wall_time_s`` is the
+        shared gang window, not a per-device slice)."""
         t0 = time.perf_counter()
         isa = IsaLayout(spec)
         if staged_addr is None:
-            addr = device.stage_stream(stream)
+            # per-device staging may land at different addresses; the
+            # staged CONTENT is identical, so decode from the first
+            addr = [d.stage_stream(stream) for d in devices][0]
         else:
             addr = staged_addr
-            device.kick_stream(addr, stream.shape[0])
-        raw = device.dram.read(
+            for d in devices:
+                d.kick_stream(addr, stream.shape[0])
+        raw = devices[0].dram.read(
             addr, stream.shape[0] * isa.insn_bytes,
             dtype=np.uint64, shape=(stream.shape[0], isa.insn_words))
         insns = self._decode_cached(spec, isa, raw)
-        stats = self._run(spec, device, insns)
-        device.regs.set_done()
-        stats.backend = self.name
-        stats.wall_time_s = time.perf_counter() - t0
+        statss = self._run_gang(spec, devices, insns)
+        wall = time.perf_counter() - t0
+        rep = None
         if timing is not None:
             # cycle replay happens OUTSIDE the wall-clock window: the
             # pure-python scheduler pass prices the stream, it is not
             # part of this engine's execution time
             rep = replay_timing(spec, insns, timing)
-            stats.total_cycles = rep.total_cycles
-            for nm, ms in rep.modules.items():
-                stats.modules[nm].busy_cycles = ms.busy_cycles
-                stats.modules[nm].stall_on_token = ms.stall_on_token
-        return stats
+        for d, stats in zip(devices, statss):
+            d.regs.set_done()
+            stats.backend = self.name
+            stats.wall_time_s = wall
+            stats.gang_size = len(devices)
+            if rep is not None:
+                stats.total_cycles = rep.total_cycles
+                for nm, ms in rep.modules.items():
+                    stats.modules[nm].busy_cycles = ms.busy_cycles
+                    stats.modules[nm].stall_on_token = ms.stall_on_token
+        return statss
 
     def _decode_cached(self, spec: HardwareSpec, isa: IsaLayout,
                        raw: np.ndarray) -> List[Insn]:
@@ -218,29 +253,39 @@ class PallasBackend:
         if not self.cache_decode:
             return isa.decode_stream(raw)
         key = (spec, hashlib.sha1(raw.tobytes()).hexdigest())
-        hit = _DECODE_CACHE.pop(key, None)
-        if hit is not None:
-            _DECODE_CACHE[key] = hit   # re-insert: LRU order by last hit
-            return hit
+        with _DECODE_LOCK:
+            hit = _DECODE_CACHE.pop(key, None)
+            if hit is not None:
+                _DECODE_CACHE[key] = hit   # re-insert: LRU order by last hit
+                return hit
         insns = isa.decode_stream(raw)
-        if len(_DECODE_CACHE) >= 128:
-            # evict the least-recently-used entry; hot streams survive
-            _DECODE_CACHE.pop(next(iter(_DECODE_CACHE)))
-        _DECODE_CACHE[key] = insns
+        with _DECODE_LOCK:
+            if len(_DECODE_CACHE) >= 128:
+                # evict the least-recently-used entry; hot streams survive
+                _DECODE_CACHE.pop(next(iter(_DECODE_CACHE)))
+            _DECODE_CACHE[key] = insns
         return insns
 
     # ------------------------------------------------------------------
-    def _run(self, spec: HardwareSpec, device: Device,
-             insns: List[Insn]) -> RunStats:
-        st = _RunState(sim=Simulator(spec, device))
-        sim = st.sim
-        stats = RunStats(modules={n: ModuleStats()
-                                  for n in _MODULE_NAMES.values()})
+    def _run_gang(self, spec: HardwareSpec, devices: Sequence[Device],
+                  insns: List[Insn]) -> List[RunStats]:
+        """Interpret one decoded stream against N per-device states in
+        lockstep.  Control flow (structure detection, tile bookkeeping,
+        materialization triggers) is data-independent — it derives from
+        the stream and the uop SRAM, which are identical across the gang
+        — so every decision is taken once on state 0 and applied to all;
+        only the operand data differs per state.  Invariant: the states'
+        ``pending`` dicts stay key-synchronized throughout."""
+        states = [_RunState(sim=Simulator(spec, d)) for d in devices]
+        statss = [RunStats(modules={n: ModuleStats()
+                                    for n in _MODULE_NAMES.values()})
+                  for _ in devices]
         tokens = {"l2c": 0, "c2l": 0, "c2s": 0, "s2c": 0}
 
         for insn in insns:
             q = route_queue(insn)
             if self.check_tokens:
+                # token protocol is stream-determined: check once
                 for fifo, flag in _IN_EDGES[q]:
                     if getattr(insn.dep, flag):
                         if tokens[fifo] == 0:
@@ -249,8 +294,8 @@ class PallasBackend:
                                 f" FIFO {fifo}: stream is not a legal "
                                 f"program-order execution")
                         tokens[fifo] -= 1
-            mstats = stats.modules[_MODULE_NAMES[q]]
-            mstats.insn_count += 1
+            for stats in statss:
+                stats.modules[_MODULE_NAMES[q]].insn_count += 1
 
             if isinstance(insn, FinishInsn):
                 pass
@@ -258,8 +303,9 @@ class PallasBackend:
                 if insn.opcode == Opcode.STORE:
                     lo = insn.sram_base
                     hi = insn.sram_base + insn.y_size * insn.x_size
-                    self._materialize_range(st, lo, hi, stats)
-                    sim._do_store(insn, stats)
+                    self._materialize_range(states, lo, hi, statss)
+                    for st, stats in zip(states, statss):
+                        st.sim._do_store(insn, stats)
                 else:
                     if insn.memory_type in (MemId.ACC, MemId.OUT):
                         # both land in tile-owned state: ACC loads overwrite
@@ -268,13 +314,14 @@ class PallasBackend:
                         width = insn.x_pad_0 + insn.x_size + insn.x_pad_1
                         rows = insn.y_pad_0 + insn.y_size + insn.y_pad_1
                         self._materialize_range(
-                            st, insn.sram_base, insn.sram_base + rows * width,
-                            stats)
-                    sim._do_load(insn, stats)
+                            states, insn.sram_base,
+                            insn.sram_base + rows * width, statss)
+                    for st, stats in zip(states, statss):
+                        st.sim._do_load(insn, stats)
             elif isinstance(insn, GemmInsn):
-                self._gemm(st, insn, stats)
+                self._gemm(states, insn, statss)
             elif isinstance(insn, AluInsn):
-                self._alu(st, insn, stats)
+                self._alu(states, insn, statss)
             else:
                 raise TypeError(type(insn))
 
@@ -282,23 +329,25 @@ class PallasBackend:
                 for fifo, flag in _OUT_EDGES[q]:
                     if getattr(insn.dep, flag):
                         tokens[fifo] += 1
-                        stats.tokens_pushed += 1
+                        for stats in statss:
+                            stats.tokens_pushed += 1
 
         # a well-formed stream leaves nothing pending, but flush anyway so
         # partial streams (no FINISH/store) still leave coherent SRAM
-        for base in list(st.pending):
-            self._materialize(st, st.pending[base], stats)
-            del st.pending[base]
-        return stats
+        if states[0].pending:
+            self._materialize_group(states, list(states[0].pending), statss,
+                                    batch_peers=False)
+        return statss
 
     # ------------------------------------------------------------------
     # pending-tile bookkeeping
     # ------------------------------------------------------------------
-    def _materialize_range(self, st: _RunState, lo: int, hi: int,
-                           stats: RunStats) -> None:
+    def _materialize_range(self, states: Sequence[_RunState], lo: int,
+                           hi: int, statss: Sequence[RunStats]) -> None:
+        st0 = states[0]
         need = []
-        for base in list(st.pending):
-            t = st.pending[base]
+        for base in list(st0.pending):
+            t = st0.pending[base]
             if t.indices[0] < hi and lo <= t.indices[-1]:
                 if np.any((t.indices >= lo) & (t.indices < hi)):
                     need.append(base)
@@ -306,64 +355,81 @@ class PallasBackend:
             # store / ACC-load trigger: peer virtual-thread tiles of the
             # same op are complete here (their epilogues precede the
             # group's first store in program order) — batch them along
-            self._materialize_group(st, need, stats, batch_peers=True)
+            self._materialize_group(states, need, statss, batch_peers=True)
 
-    def _materialize_indices(self, st: _RunState, idx: np.ndarray,
-                             stats: RunStats) -> None:
-        need = [base for base in list(st.pending)
-                if np.isin(idx, st.pending[base].indices,
+    def _materialize_indices(self, states: Sequence[_RunState],
+                             idx: np.ndarray,
+                             statss: Sequence[RunStats]) -> None:
+        st0 = states[0]
+        need = [base for base in list(st0.pending)
+                if np.isin(idx, st0.pending[base].indices,
                            assume_unique=False).any()]
         if need:
             # eager-fallback trigger: other pending tiles may still be
             # mid-accumulation, resolve only what is forced
-            self._materialize_group(st, need, stats, batch_peers=False)
+            self._materialize_group(states, need, statss, batch_peers=False)
 
-    def _materialize_group(self, st: _RunState, keys: Sequence[int],
-                           stats: RunStats, batch_peers: bool) -> None:
-        """Resolve the pending tiles at `keys` — plus, with batch_peers,
-        any structurally-identical pending peers — grouping same-plan
-        tiles into ONE (vmapped) kernel launch per GEMM stage instead of
-        one launch per tile (the batched tile dispatch)."""
-        tiles = [st.pending.pop(k) for k in keys]
-        if not self.batch_tiles:
-            for t in tiles:
-                self._materialize(st, t, stats)
-            return
-        planned: List[Tuple[Optional[tuple], _PendingTile,
-                            Optional[tuple]]] = []
-        for t in tiles:
-            if t.chunks:
-                plan = self._plan_tile(t)
-                planned.append((self._plan_key(t, plan), t, plan))
-            else:
-                planned.append((None, t, None))
-        if batch_peers:
-            sigs = {k for k, _, _ in planned if k is not None}
-            # cheap structural pre-filter so tiles of unrelated in-flight
-            # ops are rejected without paying _plan_tile's chunk copies
-            pre_sigs = {self._pre_key(t) for _, t, _ in planned if t.chunks}
+    def _materialize_group(self, states: Sequence[_RunState],
+                           keys: Sequence[int], statss: Sequence[RunStats],
+                           batch_peers: bool) -> None:
+        """Resolve the pending tiles at `keys` in EVERY gang state —
+        plus, with batch_peers, any structurally-identical pending peers
+        — grouping same-plan tiles into ONE (vmapped) kernel launch per
+        GEMM stage instead of one launch per tile.  With a gang of N the
+        launch batches N× the tiles: the per-launch dispatch cost is
+        paid once for the pool (sharded batch dispatch)."""
+        plan0: Dict[int, tuple] = {}     # state-0 plans, keyed by base
+        if batch_peers and self.batch_tiles and states[0].pending:
+            # peer sweep decided on state 0 by structural match; the
+            # chosen KEYS are popped from every state so the pending
+            # dicts stay synchronized.  A peer whose plan key diverges
+            # on another state (e.g. coincidentally-equal weight bytes
+            # merged there) still resolves correctly — it just lands in
+            # its own launch group below.
+            sigs, pre_sigs = set(), set()
+            for k in keys:
+                t = states[0].pending[k]
+                if t.chunks:
+                    plan0[k] = self._plan_tile(t)
+                    sigs.add(self._plan_key(t, plan0[k]))
+                    pre_sigs.add(self._pre_key(t))
+            peer_keys = []
             if sigs:
-                for base in list(st.pending):
-                    peer = st.pending[base]
+                for base in list(states[0].pending):
+                    if base in keys:
+                        continue
+                    peer = states[0].pending[base]
                     if not peer.chunks or self._pre_key(peer) not in pre_sigs:
                         continue
                     plan = self._plan_tile(peer)
-                    k = self._plan_key(peer, plan)
-                    if k in sigs:
-                        del st.pending[base]
-                        planned.append((k, peer, plan))
-        groups: Dict[tuple, List[Tuple[_PendingTile, tuple]]] = {}
-        for k, t, plan in planned:
-            if k is None:
-                self._materialize(st, t, stats)   # reset/ALU-only tiles
+                    if self._plan_key(peer, plan) in sigs:
+                        peer_keys.append(base)
+                        plan0[base] = plan
+            keys = list(keys) + peer_keys
+        entries: List[Tuple[int, int, _PendingTile]] = \
+            [(si, k, st.pending.pop(k))
+             for si, st in enumerate(states) for k in keys]
+        if not self.batch_tiles:
+            for si, _, t in entries:
+                self._materialize(states[si], t, statss[si])
+            return
+        groups: Dict[tuple, List[Tuple[int, _PendingTile, tuple]]] = {}
+        for si, k, t in entries:
+            if t.chunks:
+                plan = plan0[k] if si == 0 and k in plan0 \
+                    else self._plan_tile(t)
+                groups.setdefault(self._plan_key(t, plan), []).append(
+                    (si, t, plan))
             else:
-                groups.setdefault(k, []).append((t, plan))
+                self._materialize(states[si], t, statss[si])  # reset/ALU-only
         for grp in groups.values():
-            tiles_g = [t for t, _ in grp]
-            plans_g = [p for _, p in grp]
-            accs = self._resolve_tiles(tiles_g, plans_g, stats, st.sim.spec)
-            for tile, acc in zip(tiles_g, accs):
-                self._writeback(st, tile, acc, stats)
+            tiles_g = [t for _, t, _ in grp]
+            plans_g = [p for _, _, p in grp]
+            stats_g = [statss[si] for si, _, _ in grp]
+            accs = self._resolve_tiles(tiles_g, plans_g, stats_g,
+                                       states[0].sim.spec)
+            for (si, tile, _), acc in zip(grp, accs):
+                self._writeback(states[si], tile, acc, statss[si])
 
     @staticmethod
     def _overlaps_pending(st: _RunState, idx: np.ndarray) -> bool:
@@ -390,41 +456,45 @@ class PallasBackend:
             return None
         return grid, S[:, 0, :], W[0, :, :]
 
-    def _find_containing(self, st: _RunState,
-                         grid: np.ndarray) -> Optional[_PendingTile]:
+    def _find_containing(self, st: _RunState, grid: np.ndarray
+                         ) -> Optional[Tuple[int, _PendingTile]]:
         """The pending tile this GEMM accumulates into: an exact grid
         match (blocked matmul / im2col), or — with sub-grid coalescing —
         any tile whose reset region contains every dst id (the direct-conv
-        per-output-row structure)."""
-        tile = st.pending.get(int(grid.min()))
+        per-output-row structure).  Returns (pending key, tile) so a gang
+        caller can fetch the same tile in every peer state."""
+        base = int(grid.min())
+        tile = st.pending.get(base)
         if tile is not None and tile.grid.shape == grid.shape \
                 and (tile.grid == grid).all():
-            return tile
+            return base, tile
         if not self.coalesce_subgrids:
             return None
         ids = grid.ravel()
         lo, hi = int(ids.min()), int(ids.max())
-        for t in st.pending.values():
+        for k, t in st.pending.items():
             if lo >= t.indices[0] and hi <= t.indices[-1] \
                     and np.isin(ids, t.indices).all():
-                return t
+                return k, t
         return None
 
     # ------------------------------------------------------------------
     # GEMM
     # ------------------------------------------------------------------
-    def _gemm(self, st: _RunState, insn: GemmInsn, stats: RunStats) -> None:
-        sim = st.sim
-        uops = sim.uop_layout.decode_kernel(
-            sim.uop_sram[insn.uop_bgn:insn.uop_end])
+    def _gemm(self, states: Sequence[_RunState], insn: GemmInsn,
+              statss: Sequence[RunStats]) -> None:
+        sim0 = states[0].sim
+        uops = sim0.uop_layout.decode_kernel(
+            sim0.uop_sram[insn.uop_bgn:insn.uop_end])
         if not uops or insn.iter_out == 0 or insn.iter_in == 0:
             return
-        dsts, srcs, wgts = sim._affine_indices(insn, uops)
+        dsts, srcs, wgts = sim0._affine_indices(insn, uops)
         struct = self._decode_structure(insn, uops, dsts, srcs, wgts)
         if struct is None:
-            self._materialize_indices(st, np.unique(dsts), stats)
-            sim._do_gemm(insn, stats)
-            stats.eager_gemm_insns += 1
+            self._materialize_indices(states, np.unique(dsts), statss)
+            for st, stats in zip(states, statss):
+                st.sim._do_gemm(insn, stats)
+                stats.eager_gemm_insns += 1
             return
         grid, src_idx, wgt_idx = struct
 
@@ -433,123 +503,150 @@ class PallasBackend:
             # before is dead (never observed) for an exact-region match,
             # and must be resolved first otherwise
             base = int(grid.min())
-            prev = st.pending.get(base)
+            prev = states[0].pending.get(base)
             if prev is not None and prev.grid.shape == grid.shape \
                     and (prev.grid == grid).all():
-                del st.pending[base]
+                for st in states:
+                    del st.pending[base]
             else:
-                self._materialize_indices(st, np.unique(grid), stats)
-            st.pending[base] = _PendingTile(
-                grid=grid, indices=np.unique(grid))
+                self._materialize_indices(states, np.unique(grid), statss)
+            for st in states:
+                st.pending[base] = _PendingTile(
+                    grid=grid, indices=np.unique(grid))
             return
 
-        tile = self._find_containing(st, grid)
-        if tile is None or tile.alu_chain:
+        found = self._find_containing(states[0], grid)
+        if found is None or found[1].alu_chain:
             # accumulate-onto-existing-values, post-epilogue, or
             # partially-overlapping GEMM: resolve lazies, then run the
             # eager oracle semantics
-            self._materialize_indices(st, np.unique(dsts), stats)
-            sim._do_gemm(insn, stats)
-            stats.eager_gemm_insns += 1
+            self._materialize_indices(states, np.unique(dsts), statss)
+            for st, stats in zip(states, statss):
+                st.sim._do_gemm(insn, stats)
+                stats.eager_gemm_insns += 1
             return
-        # snapshot operands NOW: virtual threading will overwrite these
-        # SRAM contexts before the tile is stored
-        s = sim.spec
+        key = found[0]
+        s = sim0.spec
         U = src_idx.shape[1]
-        A = sim.inp_sram[src_idx]            # (io, U, batch, block_in)
-        Wm = sim.wgt_sram[wgt_idx]           # (ii, U, block_out, block_in)
-        A2 = np.ascontiguousarray(
-            A.transpose(0, 2, 1, 3).reshape(grid.shape[0] * s.batch,
-                                            U * s.block_in))
-        W2 = np.ascontiguousarray(
-            Wm.transpose(0, 2, 1, 3).reshape(grid.shape[1] * s.block_out,
-                                             U * s.block_in))
-        tile.chunks.append(_GemmChunk(grid=grid, a=A2, w=W2))
-        stats.coalesced_gemm_insns += 1
-        stats.gemm_macs += (grid.size * U * s.batch
-                            * s.block_in * s.block_out)
+        for st, stats in zip(states, statss):
+            sim = st.sim
+            # snapshot operands NOW: virtual threading will overwrite
+            # these SRAM contexts before the tile is stored
+            A = sim.inp_sram[src_idx]        # (io, U, batch, block_in)
+            Wm = sim.wgt_sram[wgt_idx]       # (ii, U, block_out, block_in)
+            A2 = np.ascontiguousarray(
+                A.transpose(0, 2, 1, 3).reshape(grid.shape[0] * s.batch,
+                                                U * s.block_in))
+            W2 = np.ascontiguousarray(
+                Wm.transpose(0, 2, 1, 3).reshape(grid.shape[1] * s.block_out,
+                                                 U * s.block_in))
+            st.pending[key].chunks.append(_GemmChunk(grid=grid, a=A2, w=W2))
+            stats.coalesced_gemm_insns += 1
+            stats.gemm_macs += (grid.size * U * s.batch
+                                * s.block_in * s.block_out)
 
     # ------------------------------------------------------------------
     # ALU
     # ------------------------------------------------------------------
-    def _alu(self, st: _RunState, insn: AluInsn, stats: RunStats) -> None:
-        sim = st.sim
-        uops = sim.uop_layout.decode_kernel(
-            sim.uop_sram[insn.uop_bgn:insn.uop_end])
+    def _alu(self, states: Sequence[_RunState], insn: AluInsn,
+             statss: Sequence[RunStats]) -> None:
+        sim0 = states[0].sim
+        uops = sim0.uop_layout.decode_kernel(
+            sim0.uop_sram[insn.uop_bgn:insn.uop_end])
         if not uops or insn.iter_out == 0 or insn.iter_in == 0:
             return
-        s = sim.spec
-        dsts, srcs, _ = sim._affine_indices(insn, uops)
+        s = sim0.spec
+        dsts, srcs, _ = sim0._affine_indices(insn, uops)
         if len(uops) == 1:
             # tile-epilogue shape: one uop, each dst written exactly once;
             # src may be any affine function of the loop indices (the bias
             # add reads a per-column staging row, self ops read dst)
             grid = dsts.reshape(insn.iter_out, insn.iter_in)
             src_grid = srcs.reshape(insn.iter_out, insn.iter_in)
-            tile = st.pending.get(int(grid.min()))
-            if (tile is not None and np.unique(grid).size == grid.size
-                    and tile.grid.shape == grid.shape
-                    and (tile.grid == grid).all()):
+            base = int(grid.min())
+            tile0 = states[0].pending.get(base)
+            if (tile0 is not None and np.unique(grid).size == grid.size
+                    and tile0.grid.shape == grid.shape
+                    and (tile0.grid == grid).all()):
                 op = _ALU_NAMES[insn.alu_opcode]
                 if insn.use_imm:
-                    tile.alu_chain.append(("imm", op, int(insn.imm)))
-                    stats.alu_ops += grid.size * s.batch * s.block_out
-                    stats.coalesced_alu_insns += 1
+                    for st, stats in zip(states, statss):
+                        st.pending[base].alu_chain.append(
+                            ("imm", op, int(insn.imm)))
+                        stats.alu_ops += grid.size * s.batch * s.block_out
+                        stats.coalesced_alu_insns += 1
                     return
                 # tensor-tensor: src must be readable now (eager region)
-                if not self._overlaps_pending(st, np.unique(src_grid)):
-                    src_mat = self._to_matrix(sim.acc_sram[src_grid], s)
-                    tile.alu_chain.append(("tensor", op, src_mat))
-                    stats.alu_ops += grid.size * s.batch * s.block_out
-                    stats.coalesced_alu_insns += 1
+                if not self._overlaps_pending(states[0],
+                                              np.unique(src_grid)):
+                    for st, stats in zip(states, statss):
+                        src_mat = self._to_matrix(
+                            st.sim.acc_sram[src_grid], s)
+                        st.pending[base].alu_chain.append(
+                            ("tensor", op, src_mat))
+                        stats.alu_ops += grid.size * s.batch * s.block_out
+                        stats.coalesced_alu_insns += 1
                     return
             # vector-ALU fast path: a dense single-uop op over the *eager*
             # region (no pending lazy tile) — e.g. the chunked
             # schedule_vector_binop stream — resolves through one
             # tensor_alu Pallas call instead of the eager per-row loop
             if (np.unique(grid).size == grid.size
-                    and not self._overlaps_pending(st, np.unique(dsts))
+                    and not self._overlaps_pending(states[0],
+                                                   np.unique(dsts))
                     and (insn.use_imm
-                         or not self._overlaps_pending(st,
-                                                      np.unique(srcs)))):
-                self._alu_eager_region(st, insn, grid, src_grid, stats)
+                         or not self._overlaps_pending(states[0],
+                                                       np.unique(srcs)))):
+                self._alu_eager_region(states, insn, grid, src_grid, statss)
                 return
         # fallback: eager semantics on materialized state
         need = np.unique(dsts if insn.use_imm
                          else np.concatenate([dsts, srcs]))
-        self._materialize_indices(st, need, stats)
-        sim._do_alu(insn, stats)
-        stats.eager_alu_insns += 1
+        self._materialize_indices(states, need, statss)
+        for st, stats in zip(states, statss):
+            st.sim._do_alu(insn, stats)
+            stats.eager_alu_insns += 1
 
-    def _alu_eager_region(self, st: _RunState, insn: AluInsn,
+    def _alu_eager_region(self, states: Sequence[_RunState], insn: AluInsn,
                           grid: np.ndarray, src_grid: np.ndarray,
-                          stats: RunStats) -> None:
+                          statss: Sequence[RunStats]) -> None:
         """Run one dense ALU instruction over already-materialized
         accumulator state through the tensor_alu Pallas kernel, keeping the
-        §2.5 write-through OUT mirror coherent."""
+        §2.5 write-through OUT mirror coherent.  Gang members row-stack
+        into a single launch (the region shape is identical across the
+        gang; only the data differs)."""
         import jax.numpy as jnp
 
         from ..kernels.tensor_alu import tensor_alu
-        sim = st.sim
-        s = sim.spec
+        s = states[0].sim.spec
         op = _ALU_NAMES[insn.alu_opcode]
-        dst_mat = self._to_matrix(sim.acc_sram[grid], s)
+        dst_mats = [self._to_matrix(st.sim.acc_sram[grid], s)
+                    for st in states]
+        R = dst_mats[0].shape[0]
+        big = dst_mats[0] if len(states) == 1 \
+            else np.concatenate(dst_mats, axis=0)
         if insn.use_imm:
-            out = tensor_alu(jnp.asarray(dst_mat),
+            out = tensor_alu(jnp.asarray(big),
                              chain=((op, int(insn.imm)),),
                              use_pallas=True, interpret=self.interpret)
         else:
-            src_mat = self._to_matrix(sim.acc_sram[src_grid], s)
-            out = tensor_alu(jnp.asarray(dst_mat), jnp.asarray(src_mat),
+            src_mats = [self._to_matrix(st.sim.acc_sram[src_grid], s)
+                        for st in states]
+            big_src = src_mats[0] if len(states) == 1 \
+                else np.concatenate(src_mats, axis=0)
+            out = tensor_alu(jnp.asarray(big), jnp.asarray(big_src),
                              chain=((op, None),),
                              use_pallas=True, interpret=self.interpret)
+        out = np.asarray(out, dtype=np.int32)
         io, ii = grid.shape
-        sim.acc_sram[grid] = self._from_matrix(
-            np.asarray(out, dtype=np.int32), io, ii, s)
         touched = np.unique(grid)
-        sim.out_sram[touched] = sim.acc_sram[touched].astype(np.int8)
-        stats.alu_ops += grid.size * s.batch * s.block_out
-        stats.coalesced_alu_insns += 1
+        for i, (st, stats) in enumerate(zip(states, statss)):
+            sim = st.sim
+            sim.acc_sram[grid] = self._from_matrix(
+                out[i * R:(i + 1) * R], io, ii, s)
+            sim.out_sram[touched] = sim.acc_sram[touched].astype(np.int8)
+            stats.alu_ops += grid.size * s.batch * s.block_out
+            stats.coalesced_alu_insns += 1
 
     # ------------------------------------------------------------------
     # tile resolution through the Pallas kernels
@@ -576,7 +673,7 @@ class PallasBackend:
         R, C = io * s.batch, ii * s.block_out
         if tile.chunks:
             plan = self._plan_tile(tile)
-            acc = self._resolve_tiles([tile], [plan], stats, s)[0]
+            acc = self._resolve_tiles([tile], [plan], [stats], s)[0]
         elif tile.alu_chain:
             acc = self._alu_chain(np.zeros((R, C), np.int32), tile.alu_chain)
         else:
@@ -679,7 +776,7 @@ class PallasBackend:
                       for W, parts in wgroups))
 
     def _resolve_tiles(self, tiles: Sequence[_PendingTile],
-                       plans: Sequence[tuple], stats: RunStats,
+                       plans: Sequence[tuple], statss: Sequence[RunStats],
                        spec: HardwareSpec) -> List[np.ndarray]:
         """Execute structurally-identical tile plans: per GEMM stage the
         tiles' padded operands stack along a leading tile axis and run as
@@ -688,7 +785,11 @@ class PallasBackend:
         overhead; requant fuses into the kernel epilogue exactly as in
         the per-tile path.  Non-fused ALU chains apply to the row-stacked
         tile batch in one ``tensor_alu`` pass per chain step.  Returns
-        one assembled (R, C) int32 accumulator matrix per tile."""
+        one assembled (R, C) int32 accumulator matrix per tile.
+
+        ``statss`` is parallel to ``tiles`` (gang members contribute
+        tiles with their own RunStats); each distinct stats object counts
+        every launch it participated in exactly once."""
         import functools
 
         import jax
@@ -703,37 +804,76 @@ class PallasBackend:
         results_per_tile: List[List[Tuple[np.ndarray, np.ndarray]]] = \
             [[] for _ in range(T)]
         for wi in range(len(wgroups0)):
-            Aps, Wps = [], []
-            Rg = Cg = 0
+            bm = bn = bk = 128
+            A_alls: List[np.ndarray] = []
+            Ws: List[np.ndarray] = []
             for wgroups, _shift in plans:
                 W, parts = wgroups[wi]
                 A_all = parts[0][1] if len(parts) == 1 else \
                     np.concatenate([A for _, A in parts], axis=0)
-                Rg, K = A_all.shape
-                Cg = W.shape[0]
-                bm = bn = bk = 128
-                Rp = -(-Rg // bm) * bm
-                Cp = -(-Cg // bn) * bn
-                Kp = -(-K // bk) * bk
-                Ap = np.zeros((Rp, Kp), np.int8)
-                Ap[:Rg, :K] = A_all
-                Wp = np.zeros((Kp, Cp), np.int8)
-                Wp[:K, :Cg] = W.T
-                Aps.append(Ap)
-                Wps.append(Wp)
+                A_alls.append(A_all)
+                Ws.append(W)
+            Rg, K = A_alls[0].shape
+            Cg = Ws[0].shape[0]
+            Rp = -(-Rg // bm) * bm
+            Cp = -(-Cg // bn) * bn
+            Kp = -(-K // bk) * bk
             kw = dict(interpret=interpret)
             if shift is not None:
                 kw.update(epilogue="requant", shift=shift)
-            if T == 1:
-                outs = [vta_gemm_pallas(jnp.asarray(Aps[0]),
-                                        jnp.asarray(Wps[0]), **kw)]
+            # tiles whose weight DATA is identical (gang members serving
+            # the same constant weights) can row-concat into one taller
+            # GEMM instead of spending a padded vmap lane each — the
+            # gang's requests fill the bm-row tile the padding would have
+            # wasted.  Choose by padded-row cost; ~64 rows approximates
+            # the fixed per-launch dispatch cost of an extra call.
+            subgroups: Dict[bytes, List[int]] = {}
+            for t, W in enumerate(Ws):
+                subgroups.setdefault(W.tobytes(), []).append(t)
+            cost_vmap = T * Rp
+            cost_concat = sum(-(-(len(g) * Rg) // bm) * bm
+                              for g in subgroups.values()) \
+                + 64 * (len(subgroups) - 1)
+            mats: List[Optional[np.ndarray]] = [None] * T
+            if len(subgroups) < T and cost_concat < cost_vmap:
+                for g in subgroups.values():
+                    Rp2 = -(-(len(g) * Rg) // bm) * bm
+                    Ap = np.zeros((Rp2, Kp), np.int8)
+                    for j, t in enumerate(g):
+                        Ap[j * Rg:(j + 1) * Rg, :K] = A_alls[t]
+                    Wp = np.zeros((Kp, Cp), np.int8)
+                    Wp[:K, :Cg] = Ws[g[0]].T
+                    out = np.asarray(vta_gemm_pallas(
+                        jnp.asarray(Ap), jnp.asarray(Wp), **kw))
+                    for s_ in {id(statss[t]): statss[t] for t in g}.values():
+                        s_.tile_batches += 1
+                    for j, t in enumerate(g):
+                        mats[t] = out[j * Rg:(j + 1) * Rg,
+                                      :Cg].astype(np.int32)
             else:
-                outs = jax.vmap(functools.partial(vta_gemm_pallas, **kw))(
-                    jnp.asarray(np.stack(Aps)), jnp.asarray(np.stack(Wps)))
-            stats.tile_batches += 1
-            outs = np.asarray(outs)
+                Aps, Wps = [], []
+                for t in range(T):
+                    Ap = np.zeros((Rp, Kp), np.int8)
+                    Ap[:Rg, :K] = A_alls[t]
+                    Wp = np.zeros((Kp, Cp), np.int8)
+                    Wp[:K, :Cg] = Ws[t].T
+                    Aps.append(Ap)
+                    Wps.append(Wp)
+                if T == 1:
+                    outs = [vta_gemm_pallas(jnp.asarray(Aps[0]),
+                                            jnp.asarray(Wps[0]), **kw)]
+                else:
+                    outs = jax.vmap(functools.partial(vta_gemm_pallas,
+                                                      **kw))(
+                        jnp.asarray(np.stack(Aps)),
+                        jnp.asarray(np.stack(Wps)))
+                for s_ in {id(s_): s_ for s_ in statss}.values():
+                    s_.tile_batches += 1
+                outs = np.asarray(outs)
+                for t in range(T):
+                    mats[t] = outs[t][:Rg, :Cg].astype(np.int32)
             for t in range(T):
-                mat = outs[t][:Rg, :Cg].astype(np.int32)
+                mat = mats[t]
                 off = 0
                 for g, A in plans[t][0][wi][1]:
                     rows = A.shape[0]

@@ -39,11 +39,24 @@ class Dram:
     def free(self, addr: int) -> None:
         self._allocs.pop(addr, None)  # bump allocator: bookkeeping only
 
-    def clone(self) -> "Dram":
+    def clone(self, trim: bool = False) -> "Dram":
+        """Independent copy of the DRAM state.  With ``trim`` the copy
+        keeps only the ALLOCATED image (every byte below the bump
+        pointer, rounded up to alignment): reads and writes of existing
+        buffers behave identically, but any further ``alloc`` raises
+        MemoryError — exactly the contract of a pooled serving device,
+        whose pre-staged CompiledProgram must never allocate per call.
+        A pool of trimmed clones costs O(used bytes) each instead of the
+        full address-space image."""
         c = Dram.__new__(Dram)
-        c.size = self.size
         c.align = self.align
-        c.mem = self.mem.copy()
+        if trim:
+            used = (self._next + self.align - 1) // self.align * self.align
+            c.size = used
+            c.mem = self.mem[:used].copy()
+        else:
+            c.size = self.size
+            c.mem = self.mem.copy()
         c._next = self._next
         c._allocs = dict(self._allocs)
         return c
@@ -96,12 +109,14 @@ class Device:
         self.cache_flushes = 0
         self.cache_invalidates = 0
 
-    def clone(self) -> "Device":
+    def clone(self, trim: bool = False) -> "Device":
         """Independent copy of the full device state — the cross-backend
         checker runs each engine against its own clone and diffs the
-        resulting DRAM images."""
+        resulting DRAM images.  ``trim`` clones only the allocated DRAM
+        image and forbids further allocation (see :meth:`Dram.clone`) —
+        the device-pool slot configuration."""
         c = Device.__new__(Device)
-        c.dram = self.dram.clone()
+        c.dram = self.dram.clone(trim=trim)
         c.regs = ControlRegisters(self.regs.control, self.regs.insn_count,
                                   self.regs.insns)
         c.cache_flushes = self.cache_flushes

@@ -35,6 +35,7 @@ so the memory image stays constant across arbitrarily long serving loops
 from __future__ import annotations
 
 import hashlib
+import threading
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -644,11 +645,29 @@ def _build(prog: Program, fence_mode: str = "buffer",
 # the compiled artifact
 # ----------------------------------------------------------------------
 @dataclass
+class RunResult:
+    """One execution of a CompiledProgram against SOME device: outputs,
+    the per-segment RunStats, and the bytes staged for the call.  The
+    value object the serving layer (``repro.core.serve``) passes around
+    so concurrent requests never share mutable state."""
+    outputs: Union[np.ndarray, Dict[str, np.ndarray]]
+    stats: List[RunStats]
+    staging_bytes: int
+
+
+@dataclass
 class CompiledProgram:
     """Encoded stream segments + bound DRAM buffers: call with new input
     data as many times as you like — no re-scheduling happens, and with
     ``prestage`` (default) no per-call DRAM allocation either: the DRAM
-    image size is constant over arbitrarily long serving loops."""
+    image size is constant over arbitrarily long serving loops.
+
+    Thread-safety: ``__call__`` serializes fully under ``_lock`` (it
+    stages into the ONE shared compile-time device, so interleaving two
+    calls would corrupt inputs mid-run); true concurrency goes through
+    :meth:`run_on`, which executes against a caller-owned device clone
+    and touches NO shared state — the entry point ``serve.DevicePool``
+    uses, one clone per slot."""
     spec: HardwareSpec
     nodes: List[Node]
     addrs: Dict[int, int]
@@ -667,6 +686,11 @@ class CompiledProgram:
     calls: int = 0
     last_staging_bytes: int = 0    # bytes staged by the most recent call
     last_stats: List[RunStats] = field(default_factory=list)
+    # serializes __call__ end to end: staging + execution share the one
+    # compile-time device, and the mirrors above must match the call
+    # that produced them.  run_on never takes it.
+    _lock: Any = field(default_factory=threading.Lock, repr=False,
+                       compare=False)
 
     # ---- introspection -------------------------------------------------
     @property
@@ -693,7 +717,14 @@ class CompiledProgram:
         """One line per step; conv nodes carry their resolved lowering
         mode (direct | im2col | via_matmul), fenced producer->consumer
         edges are listed per segment, and the arena/staging summary shows
-        what the serving fast path reuses."""
+        what the serving fast path reuses.
+
+        Everything in this line is per-DEVICE state: a
+        ``serve.DevicePool`` clones the staged image once per slot, so
+        the arena/staging figures hold for every slot independently —
+        ``DevicePool.describe()`` prefixes this summary and appends one
+        line per slot (calls served, staged bytes, tiles/launches, gang
+        share); ``BatchServer`` shards across those slots."""
         def label(i: int) -> str:
             n = self.nodes[i]
             return f"{n.name}:{n.lowering}" if n.lowering else n.name
@@ -720,58 +751,111 @@ class CompiledProgram:
         return chain + tail
 
     # ---- data movement -------------------------------------------------
-    def _write(self, nid: int, arr: np.ndarray) -> int:
+    def _write(self, nid: int, arr: np.ndarray,
+               device: Any = None) -> int:
+        """Pack + stage one logical tensor into `device` (default: the
+        compile-time device).  Pool slots pass their own clone — every
+        buffer address is identical across clones of the staged image."""
+        dev = device if device is not None else self.device
         node = self.nodes[nid]
         packed = node.meta.pack(arr, self.spec)
-        self.device.dram.write(self.addrs[nid], packed)
-        self.device.flush_cache(self.addrs[nid], packed.nbytes)
+        dev.dram.write(self.addrs[nid], packed)
+        dev.flush_cache(self.addrs[nid], packed.nbytes)
         return packed.nbytes
 
-    def _read(self, nid: int) -> np.ndarray:
+    def _read(self, nid: int, device: Any = None) -> np.ndarray:
+        dev = device if device is not None else self.device
         node = self.nodes[nid]
         meta = node.meta
-        blocked = self.device.dram.read(
+        blocked = dev.dram.read(
             self.addrs[nid], meta.nbytes(self.spec),
             dtype=meta.np_dtype(), shape=meta.blocked_shape(self.spec))
         return meta.unpack(blocked, self.spec)
 
     # ---- execution -----------------------------------------------------
-    def __call__(self, backend: BackendLike = None, timing: Any = None,
-                 **inputs: np.ndarray) -> Union[np.ndarray,
-                                                Dict[str, np.ndarray]]:
+    def check_inputs(self, inputs: Dict[str, np.ndarray]) -> None:
         required = set(self.input_ids) - self.const_names
         missing = required - set(inputs)
         extra = set(inputs) - required
         if missing or extra:
             raise ValueError(f"inputs mismatch: missing {sorted(missing)}, "
                              f"unexpected {sorted(extra)}")
-        staging = 0
-        for name, arr in inputs.items():
-            staging += self._write(self.input_ids[name], arr)
-        eng = resolve_backend(backend)
-        self.calls += 1
-        self.last_stats = []
-        for step in self.steps:
-            if isinstance(step, AccelStep):
-                if self.prestage and step.staged_addr >= 0:
-                    stats = eng.execute(self.spec, self.device, step.stream,
-                                        timing=timing,
-                                        staged_addr=step.staged_addr)
-                else:
-                    stats = eng.execute(self.spec, self.device, step.stream,
-                                        timing=timing)
-                    staging += step.stream.nbytes  # re-staged every call
-                stats.n_join_barriers = step.n_barriers
-                stats.n_buffer_fences = step.n_fences
-                self.last_stats.append(stats)
+
+    def stage_inputs(self, inputs: Dict[str, np.ndarray],
+                     device: Any = None) -> int:
+        """Validate + write the call's activations into `device`; returns
+        the staged byte count."""
+        self.check_inputs(inputs)
+        return sum(self._write(self.input_ids[name], arr, device=device)
+                   for name, arr in inputs.items())
+
+    def exec_step(self, step: Union[AccelStep, CpuStep], device: Any,
+                  eng: Any, timing: Any = None) -> Optional[RunStats]:
+        """Run ONE step of the program against `device`: accelerator
+        segments hand the encoded stream to `eng` (kicking the pre-staged
+        copy when available), host steps run the node's fn on logical
+        arrays read from/written to the same device.  Returns the
+        segment's RunStats (None for host steps).  Touches no shared
+        mutable state — the pool scheduler interleaves steps of different
+        requests through this hook."""
+        if isinstance(step, AccelStep):
+            if self.prestage and step.staged_addr >= 0:
+                stats = eng.execute(self.spec, device, step.stream,
+                                    timing=timing,
+                                    staged_addr=step.staged_addr)
             else:
-                node = self.nodes[step.node_id]
-                args = [self._read(i) for i in node.inputs]
-                self._write(step.node_id, node.fn(*args))
-        self.last_staging_bytes = staging
-        for s in self.last_stats:
-            s.staging_bytes_per_call = staging
-        outs = {self.nodes[i].name: self._read(i) for i in self.output_ids}
+                stats = eng.execute(self.spec, device, step.stream,
+                                    timing=timing)
+            stats.n_join_barriers = step.n_barriers
+            stats.n_buffer_fences = step.n_fences
+            return stats
+        node = self.nodes[step.node_id]
+        args = [self._read(i, device=device) for i in node.inputs]
+        self._write(step.node_id, node.fn(*args), device=device)
+        return None
+
+    def read_outputs(self, device: Any = None
+                     ) -> Union[np.ndarray, Dict[str, np.ndarray]]:
+        outs = {self.nodes[i].name: self._read(i, device=device)
+                for i in self.output_ids}
         if len(outs) == 1:
             return next(iter(outs.values()))
         return outs
+
+    def run_on(self, device: Any, backend: BackendLike = None,
+               timing: Any = None,
+               inputs: Optional[Dict[str, np.ndarray]] = None) -> RunResult:
+        """Execute the whole program serially against an arbitrary device
+        clone of the staged image.  Reentrant: shares NOTHING mutable
+        with other run_on calls, so pool slots may run it concurrently —
+        the per-slot invariant behind the serving layer."""
+        staging = self.stage_inputs(dict(inputs or {}), device=device)
+        eng = resolve_backend(backend)
+        stats_list: List[RunStats] = []
+        for step in self.steps:
+            stats = self.exec_step(step, device, eng, timing=timing)
+            if stats is not None:
+                if not (self.prestage and step.staged_addr >= 0):
+                    staging += step.stream.nbytes  # re-staged every call
+                stats_list.append(stats)
+        for s in stats_list:
+            s.staging_bytes_per_call = staging
+        return RunResult(outputs=self.read_outputs(device=device),
+                         stats=stats_list, staging_bytes=staging)
+
+    def __call__(self, backend: BackendLike = None, timing: Any = None,
+                 **inputs: np.ndarray) -> Union[np.ndarray,
+                                                Dict[str, np.ndarray]]:
+        # the WHOLE call serializes under _lock, not just the mirror
+        # update: the synchronous path shares ONE device image, so two
+        # interleaved calls would stage over each other's inputs and
+        # race the control registers.  Concurrency lives in
+        # serve.DevicePool, which gives every request its own device
+        # clone through run_on and never takes this lock.
+        with self._lock:
+            res = self.run_on(self.device, backend=backend, timing=timing,
+                              inputs=inputs)
+            self.calls += 1
+            self.last_stats = res.stats
+            self.last_staging_bytes = res.staging_bytes
+        return res.outputs

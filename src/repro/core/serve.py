@@ -1,0 +1,506 @@
+"""Async multi-stream serving: device pools, submit/wait futures, and
+sharded batch dispatch.
+
+The paper's task-ISA "explicitly orchestrates concurrent compute and
+memory tasks" inside one device; this module orchestrates concurrency
+ACROSS devices, which is how the runtime the paper sketches (and TVM's,
+arXiv 1802.04799) serves real traffic: a compiled program is staged once,
+cloned onto a pool of devices, and requests stream through an async
+submit()/wait() API.
+
+  * :class:`DevicePool` — N cloned, pre-staged devices per
+    CompiledProgram (``Device.clone(trim=True)`` of the staged image:
+    streams, constants and the recycled intermediate arena are already
+    in DRAM, and a slot can never allocate — the zero-per-call-DRAM
+    serving contract, now enforced per slot by construction).  Requests
+    are assigned to slot queues at submit time by a round-robin or
+    least-loaded policy.
+
+  * a **worker-scheduler** (one thread) that advances every in-flight
+    request step by step: host segments are dispatched to a host
+    executor thread FIRST, then the accelerator segments of the other
+    requests run — so one request's host work overlaps another's
+    accelerator work — and requests sitting at the SAME accelerator
+    segment execute as one lockstep **gang**
+    (:meth:`PallasBackend.execute_gang`): every kernel launch batches
+    the peer tiles of all gang members, so aggregate calls/sec scales
+    with pool size instead of with the GIL.
+
+  * :class:`BatchServer` — shards a batch of requests across the pool
+    and gathers results in submission order.
+
+The simulator engine has no gang mode; a pool over ``backend=
+"simulator"`` runs its slots serially and acts as the concurrency
+oracle: the differential suite byte-diffs every pooled execution against
+serial single-device runs on both engines.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .backend import BackendLike, resolve_backend
+from .compiler import AccelStep, CpuStep
+from .program import CompiledProgram
+from .simulator import RunStats
+
+POLICIES = ("round_robin", "least_loaded")
+
+
+class PoolClosed(RuntimeError):
+    pass
+
+
+# ----------------------------------------------------------------------
+# futures
+# ----------------------------------------------------------------------
+class PoolFuture:
+    """Handle to one submitted request.  ``wait()`` blocks until the
+    scheduler finishes the request (in any order relative to other
+    futures — waits may be out of submission order) and returns the
+    program outputs; request-local stats ride on the future, never on
+    shared CompiledProgram state."""
+
+    def __init__(self, slot_id: int, seq: int):
+        self.slot_id = slot_id          # which pool slot serves it
+        self.seq = seq                  # global submission order
+        self.stats: List[RunStats] = []  # per accel segment, this request
+        self.staging_bytes = 0
+        self._done = threading.Event()
+        self._outputs: Any = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None
+             ) -> Union[np.ndarray, Dict[str, np.ndarray]]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request #{self.seq} (slot {self.slot_id}) not done "
+                f"within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._outputs
+
+    result = wait
+
+    # scheduler side
+    def _finish(self, outputs: Any) -> None:
+        self._outputs = outputs
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._done.set()
+
+
+@dataclass
+class SlotStats:
+    """Cumulative serving counters of one pool slot (touched only by the
+    scheduler thread — per-slot by construction, so concurrent requests
+    cannot cross-contaminate them)."""
+    calls: int = 0
+    staging_bytes: int = 0
+    accel_steps: int = 0
+    cpu_steps: int = 0
+    ganged_steps: int = 0           # accel steps executed in a gang > 1
+    tiles_resolved: int = 0
+    tile_batches: int = 0
+
+
+@dataclass
+class _Slot:
+    id: int
+    device: Any
+    stats: SlotStats = field(default_factory=SlotStats)
+    queue: List["_Request"] = field(default_factory=list)
+    active: Optional["_Request"] = None
+
+    @property
+    def load(self) -> int:
+        return len(self.queue) + (1 if self.active is not None else 0)
+
+
+@dataclass
+class _Request:
+    future: PoolFuture
+    inputs: Dict[str, np.ndarray]
+    step_idx: int = -1              # -1: inputs not yet staged
+
+
+# ----------------------------------------------------------------------
+# the pool
+# ----------------------------------------------------------------------
+class DevicePool:
+    """N cloned pre-staged devices serving one CompiledProgram through an
+    async submit()/wait() API.
+
+    Parameters
+    ----------
+    compiled: the staged artifact (``prestage=True`` recommended —
+        trimmed slot clones cannot allocate DRAM).
+    size: number of device slots.
+    backend: engine every request runs on ("pallas" gangs lockstep
+        requests; "simulator" is the serial oracle).  One engine
+        instance is shared by the whole pool so jit/decode caches warm
+        once.
+    policy: "round_robin" assigns submits to slots cyclically;
+        "least_loaded" picks the slot with the fewest queued + running
+        requests (ties to the lowest slot id).
+    trim: clone only the allocated DRAM image per slot (MemoryError on
+        any per-call allocation instead of silent growth).  Defaults to
+        ``compiled.prestage`` — a restaging (prestage=False) program
+        legitimately allocates its stream every call and needs the full
+        address space.
+    """
+
+    def __init__(self, compiled: CompiledProgram, size: int = 2,
+                 backend: BackendLike = "pallas",
+                 policy: str = "round_robin", timing: Any = None,
+                 trim: Optional[bool] = None):
+        if size < 1:
+            raise ValueError(f"pool size must be >= 1, got {size}")
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        if trim is None:
+            trim = compiled.prestage
+        self.compiled = compiled
+        self.engine = resolve_backend(backend)
+        self.policy = policy
+        self.timing = timing
+        self.slots = [_Slot(id=i, device=compiled.device.clone(trim=trim))
+                      for i in range(size)]
+        self._rr = itertools.cycle(range(size))
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._closed = False
+        self._inflight = 0
+        self._idle = threading.Condition(self._lock)
+        # persistent host worker: one long-lived thread consuming host
+        # segment batches, so the hot serving path never pays per-round
+        # thread creation
+        self._host_q: "queue.Queue[Any]" = queue.Queue()
+        self._host_thread = threading.Thread(
+            target=self._run_host_worker, name="repro-pool-host",
+            daemon=True)
+        self._host_thread.start()
+        self._scheduler = threading.Thread(
+            target=self._run_scheduler, name="repro-pool-scheduler",
+            daemon=True)
+        self._scheduler.start()
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.slots)
+
+    def __enter__(self) -> "DevicePool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, **inputs: np.ndarray) -> PoolFuture:
+        """Enqueue one request; returns immediately with a future.
+        Thread-safe: any thread may submit, waits may happen in any
+        order.  Input arrays are validated here (fail fast, in the
+        caller) and staged into the slot's DRAM by the scheduler."""
+        self.compiled.check_inputs(inputs)
+        with self._lock:
+            if self._closed:
+                raise PoolClosed("submit() on a closed DevicePool")
+            if self.policy == "round_robin":
+                slot = self.slots[next(self._rr)]
+            else:
+                slot = min(self.slots, key=lambda s: (s.load, s.id))
+            fut = PoolFuture(slot_id=slot.id, seq=next(self._seq))
+            slot.queue.append(_Request(future=fut, inputs=dict(inputs)))
+            self._inflight += 1
+            self._wake.notify_all()
+        return fut
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request has completed."""
+        with self._lock:
+            if not self._idle.wait_for(lambda: self._inflight == 0,
+                                       timeout=timeout):
+                raise TimeoutError("DevicePool.drain timed out")
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Reject new submits, let in-flight requests finish, stop the
+        scheduler and host-worker threads.  If the scheduler fails to
+        drain within `timeout` (a wedged host fn or kernel), every
+        still-pending future is FAILED with PoolClosed so no waiter
+        blocks forever on a pool that will never answer."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._wake.notify_all()
+        self._scheduler.join(timeout)
+        if self._scheduler.is_alive():
+            err = PoolClosed(
+                f"DevicePool.close: scheduler did not drain within "
+                f"{timeout}s; failing all pending futures")
+            with self._lock:
+                for slot in self.slots:
+                    pending = list(slot.queue)
+                    slot.queue.clear()
+                    if slot.active is not None:
+                        pending.append(slot.active)
+                    for req in pending:
+                        if not req.future.done():
+                            req.future._fail(err)
+        self._host_q.put(None)                  # stop the host worker
+        self._host_thread.join(timeout)
+
+    # ------------------------------------------------------------------
+    # the worker-scheduler
+    # ------------------------------------------------------------------
+    def _run_host_worker(self) -> None:
+        """Long-lived host-segment executor: the scheduler hands it the
+        round's CpuStep batch, then runs the accelerator gangs while the
+        host fns execute here — one request's host work overlaps other
+        requests' accelerator work (the GIL drops inside the gangs' XLA
+        kernels)."""
+        compiled = self.compiled
+        while True:
+            item = self._host_q.get()
+            if item is None:
+                return
+            host_slots, host_errs, done = item
+            for slot in host_slots:
+                step = compiled.steps[slot.active.step_idx]
+                try:
+                    compiled.exec_step(step, slot.device, self.engine,
+                                       timing=self.timing)
+                    slot.stats.cpu_steps += 1
+                except BaseException as e:
+                    host_errs[slot.id] = e
+            done.set()
+
+    def _run_scheduler(self) -> None:
+        compiled = self.compiled
+        steps = compiled.steps
+        while True:
+            with self._lock:
+                self._wake.wait_for(
+                    lambda: self._closed or self._inflight > 0)
+                if self._closed and self._inflight == 0:
+                    return
+                # admit queued requests to their slots
+                for slot in self.slots:
+                    if slot.active is None and slot.queue:
+                        slot.active = slot.queue.pop(0)
+                active = [s for s in self.slots if s.active is not None]
+                if not active:
+                    # closed with queued-but-unadmittable? impossible —
+                    # admission above always fills an empty slot
+                    continue
+            try:
+                self._advance(active, steps)
+            except BaseException as e:          # defensive: fail loudly
+                with self._lock:
+                    for slot in active:
+                        if slot.active is not None:
+                            slot.active.future._fail(e)
+                            slot.active = None
+                            self._inflight -= 1
+                    self._idle.notify_all()
+
+    def _advance(self, active: List[_Slot], steps: List[Any]) -> None:
+        """One scheduler round: stage fresh requests, overlap host
+        segments with accelerator segments, gang same-segment requests,
+        then retire finished ones."""
+        compiled = self.compiled
+
+        # stage inputs of freshly admitted requests
+        for slot in active:
+            req = slot.active
+            if req.step_idx < 0:
+                try:
+                    req.future.staging_bytes = compiled.stage_inputs(
+                        req.inputs, device=slot.device)
+                    slot.stats.staging_bytes += req.future.staging_bytes
+                    req.inputs = {}
+                    req.step_idx = 0
+                except BaseException as e:
+                    self._retire(slot, error=e)
+                    return
+
+        # split this round's work: host segments first (dispatched to a
+        # worker thread so they overlap the accel gangs below — the GIL
+        # drops while the gang's kernels run inside XLA)
+        host_slots = [s for s in active
+                      if s.active is not None
+                      and s.active.step_idx < len(steps)
+                      and isinstance(steps[s.active.step_idx], CpuStep)]
+        accel_slots = [s for s in active
+                       if s.active is not None
+                       and s.active.step_idx < len(steps)
+                       and isinstance(steps[s.active.step_idx], AccelStep)]
+
+        host_errs: Dict[int, BaseException] = {}
+        host_done: Optional[threading.Event] = None
+        if host_slots:
+            host_done = threading.Event()
+            self._host_q.put((host_slots, host_errs, host_done))
+
+        # accelerator segments: group same-step requests into gangs
+        accel_errs: Dict[int, BaseException] = {}
+        try:
+            by_step: Dict[int, List[_Slot]] = {}
+            for slot in accel_slots:
+                by_step.setdefault(slot.active.step_idx, []).append(slot)
+            for idx, group in by_step.items():
+                try:
+                    self._exec_accel(steps[idx], group)
+                except BaseException as e:
+                    # fail ONLY the gang that raised; other requests in
+                    # this round proceed untouched
+                    for slot in group:
+                        accel_errs[slot.id] = e
+        finally:
+            if host_done is not None:
+                host_done.wait()
+
+        # advance + retire
+        for slot in list(active):
+            if slot.active is None:
+                continue
+            err = host_errs.get(slot.id) or accel_errs.get(slot.id)
+            if err is not None:
+                self._retire(slot, error=err)
+                continue
+            slot.active.step_idx += 1
+            if slot.active.step_idx >= len(steps):
+                self._retire(slot)
+
+    def _exec_accel(self, step: AccelStep, group: List[_Slot]) -> None:
+        """Run one accelerator segment for every slot in `group` — as a
+        lockstep gang when the engine supports it (identical pre-staged
+        stream on every slot), serially otherwise."""
+        compiled = self.compiled
+        gang = getattr(self.engine, "execute_gang", None)
+        prestaged = compiled.prestage and step.staged_addr >= 0
+        if gang is not None and len(group) > 1 and prestaged:
+            statss = gang(compiled.spec, [s.device for s in group],
+                          step.stream, timing=self.timing,
+                          staged_addr=step.staged_addr)
+            for slot, stats in zip(group, statss):
+                stats.n_join_barriers = step.n_barriers
+                stats.n_buffer_fences = step.n_fences
+                stats.staging_bytes_per_call = \
+                    slot.active.future.staging_bytes
+                slot.active.future.stats.append(stats)
+                slot.stats.accel_steps += 1
+                slot.stats.ganged_steps += 1
+                slot.stats.tiles_resolved += stats.tiles_resolved
+                slot.stats.tile_batches += stats.tile_batches
+            return
+        for slot in group:
+            stats = compiled.exec_step(step, slot.device, self.engine,
+                                       timing=self.timing)
+            stats.staging_bytes_per_call = slot.active.future.staging_bytes
+            slot.active.future.stats.append(stats)
+            slot.stats.accel_steps += 1
+            slot.stats.tiles_resolved += stats.tiles_resolved
+            slot.stats.tile_batches += stats.tile_batches
+
+    def _retire(self, slot: _Slot, error: Optional[BaseException] = None
+                ) -> None:
+        req = slot.active
+        slot.active = None
+        if error is not None:
+            req.future._fail(error)
+        else:
+            try:
+                req.future._finish(
+                    self.compiled.read_outputs(device=slot.device))
+                slot.stats.calls += 1
+            except BaseException as e:
+                req.future._fail(e)
+        with self._lock:
+            self._inflight -= 1
+            self._idle.notify_all()
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def slot_stats(self) -> List[SlotStats]:
+        return [s.stats for s in self.slots]
+
+    def describe(self) -> str:
+        """``CompiledProgram.describe()`` (per-device invariants hold per
+        slot) plus one serving line per slot."""
+        lines = [self.compiled.describe(),
+                 f"pool[{len(self.slots)} slots, {self.engine.name}, "
+                 f"{self.policy}]"]
+        for s in self.slots:
+            st = s.stats
+            lines.append(
+                f"  slot{s.id}: {st.calls} calls, {st.staging_bytes}B "
+                f"staged, {st.accel_steps} accel steps "
+                f"({st.ganged_steps} ganged), {st.cpu_steps} host steps, "
+                f"{st.tiles_resolved} tiles / {st.tile_batches} launches")
+        return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------
+# batch serving
+# ----------------------------------------------------------------------
+class BatchServer:
+    """Shards a batch of requests across a DevicePool and gathers the
+    results in submission order.
+
+        server = BatchServer(pool)
+        outs = server([{"x": x0}, {"x": x1}, ...])   # outs[i] <-> req i
+
+    Construction can also own the pool: ``BatchServer.build(compiled,
+    size=4, policy="least_loaded")``."""
+
+    def __init__(self, pool: DevicePool):
+        self.pool = pool
+
+    @classmethod
+    def build(cls, compiled: CompiledProgram, size: int = 2,
+              **pool_kw) -> "BatchServer":
+        return cls(DevicePool(compiled, size=size, **pool_kw))
+
+    def __call__(self, requests: Sequence[Dict[str, np.ndarray]],
+                 timeout: Optional[float] = None
+                 ) -> List[Union[np.ndarray, Dict[str, np.ndarray]]]:
+        futures = [self.pool.submit(**req) for req in requests]
+        return [f.wait(timeout=timeout) for f in futures]
+
+    def submit_all(self, requests: Sequence[Dict[str, np.ndarray]]
+                   ) -> List[PoolFuture]:
+        return [self.pool.submit(**req) for req in requests]
+
+    def close(self) -> None:
+        self.pool.close()
+
+    def __enter__(self) -> "BatchServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve_batch(compiled: CompiledProgram,
+                requests: Sequence[Dict[str, np.ndarray]],
+                size: int = 2, **pool_kw
+                ) -> List[Union[np.ndarray, Dict[str, np.ndarray]]]:
+    """One-shot convenience: pool up, shard `requests`, gather in order,
+    tear down."""
+    with BatchServer.build(compiled, size=size, **pool_kw) as server:
+        return server(requests)

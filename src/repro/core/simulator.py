@@ -119,12 +119,43 @@ class RunStats:
     # them (tiles_resolved / tile_batches = batching factor)
     tiles_resolved: int = 0
     tile_batches: int = 0
+    # gang width of the run that produced this stats object: 1 for a
+    # plain execute; N when the stream ran on N pooled devices in
+    # lockstep (PallasBackend.execute_gang) — wall_time_s is then the
+    # shared gang window, not a per-device slice
+    gang_size: int = 1
 
     @property
     def eager_compute_insns(self) -> int:
         """Compute instructions the PallasBackend executed on the eager
         per-uop fallback instead of the kernel fast path."""
         return self.eager_gemm_insns + self.eager_alu_insns
+
+    @classmethod
+    def merged(cls, runs: "List[RunStats]") -> "RunStats":
+        """Sum the counter fields of several runs (e.g. one pooled slot's
+        serving history) into one aggregate RunStats.  Cycle/wall fields
+        add too — meaningful as totals, not as a single-run profile;
+        ``gang_size`` reports the maximum seen."""
+        out = cls(modules={})
+        for r in runs:
+            for f in ("total_cycles", "gemm_macs", "alu_ops",
+                      "dram_rd_bytes", "dram_wr_bytes", "tokens_pushed",
+                      "wall_time_s", "coalesced_gemm_insns",
+                      "coalesced_alu_insns", "eager_gemm_insns",
+                      "eager_alu_insns", "n_join_barriers",
+                      "n_buffer_fences", "staging_bytes_per_call",
+                      "tiles_resolved", "tile_batches"):
+                setattr(out, f, getattr(out, f) + getattr(r, f))
+            out.gang_size = max(out.gang_size, r.gang_size)
+            for nm, ms in r.modules.items():
+                agg = out.modules.setdefault(nm, ModuleStats())
+                agg.busy_cycles += ms.busy_cycles
+                agg.insn_count += ms.insn_count
+                agg.stall_on_token += ms.stall_on_token
+        if runs:
+            out.backend = runs[-1].backend
+        return out
 
     @property
     def compute_utilization(self) -> float:

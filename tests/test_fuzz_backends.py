@@ -44,6 +44,13 @@ FUZZ_SEED = int(os.environ.get("REPRO_FUZZ_SEED", "20260802"))
 FUZZ_GRAPHS = int(os.environ.get("REPRO_FUZZ_GRAPHS", "36"))
 # "" = pynq-scale mix (CI); "tpu_like" = MXU-shaped template (nightly)
 FUZZ_SPEC = os.environ.get("REPRO_FUZZ_SPEC", "")
+# fuzz FLAVOR: "" = the cross-backend sweep below; "pool" = random
+# graphs served through a DevicePool with randomized submit order and
+# pool size, byte-diffed against serial execution (the nightly job runs
+# both).  A small always-on pool sweep keeps tier-1 coverage.
+FUZZ_FLAVOR = os.environ.get("REPRO_FUZZ_FLAVOR", "")
+POOL_GRAPHS = int(os.environ.get("REPRO_FUZZ_POOL_GRAPHS",
+                                 "24" if FUZZ_FLAVOR == "pool" else "6"))
 
 _VEC_OPS = (AluOp.ADD, AluOp.MIN, AluOp.MAX, AluOp.MUL)
 
@@ -260,11 +267,75 @@ def _run_one(seed: int) -> None:
 
 
 # ----------------------------------------------------------------------
+# pool flavor: random graphs served concurrently through a DevicePool,
+# byte-diffed against serial single-device execution
+# ----------------------------------------------------------------------
+def _run_one_pool(seed: int) -> None:
+    from repro.core.serve import DevicePool
+
+    rng = np.random.default_rng(seed)
+    p, feeds = build_random_program(rng)
+    fence_mode = ("buffer", "barrier")[int(rng.integers(0, 2))]
+    compiled = p.compile(use_cache=False, fence_mode=fence_mode)
+    backend = ("simulator", "pallas")[int(rng.integers(0, 2))]
+    pool_size = int(rng.integers(1, 5))
+    policy = ("round_robin", "least_loaded")[int(rng.integers(0, 2))]
+    n_requests = int(rng.integers(2, 3 + 2 * pool_size))
+
+    # fresh per-request feeds with the same shapes/dtypes (permuted
+    # content keeps ranges valid for every node kind)
+    def permute(feed):
+        return {k: rng.permutation(v.ravel()).reshape(v.shape)
+                for k, v in feed.items()}
+    requests = [permute(feeds) for _ in range(n_requests)]
+    serial = [compiled(backend=backend, **r) for r in requests]
+    refs = [evaluate_reference(p, r) for r in requests]
+
+    ctx = (f"seed={seed} fence_mode={fence_mode} backend={backend} "
+           f"pool={pool_size}/{policy} ({compiled.describe()})")
+    with DevicePool(compiled, size=pool_size, backend=backend,
+                    policy=policy) as pool:
+        order = rng.permutation(n_requests)              # submit order
+        futs = {int(i): pool.submit(**requests[i]) for i in order}
+        for i in rng.permutation(n_requests):            # wait order
+            got = futs[int(i)].wait(timeout=600)
+            want = serial[int(i)]
+            if not isinstance(got, dict):
+                got = {"out": got}
+                want = {"out": want}
+            for name in got:
+                np.testing.assert_array_equal(
+                    got[name], want[name],
+                    err_msg=f"{ctx} req={i} node={name}: pooled "
+                            "execution diverged from serial")
+        for i, ref in enumerate(refs):
+            got = futs[i].wait()
+            outs = got if isinstance(got, dict) else \
+                {p.nodes[compiled.output_ids[0]].name: got}
+            for nid in compiled.output_ids:
+                np.testing.assert_array_equal(
+                    outs[p.nodes[nid].name], ref[nid],
+                    err_msg=f"{ctx} req={i}: pooled execution diverged "
+                            "from the numpy reference")
+
+
+# ----------------------------------------------------------------------
 # the deterministic CI sweep (>= 50 graphs, fixed seed)
 # ----------------------------------------------------------------------
 @pytest.mark.parametrize("idx", range(FUZZ_GRAPHS))
 def test_fuzz_cross_backend(idx):
-    _run_one(FUZZ_SEED + idx)
+    if FUZZ_FLAVOR == "pool":
+        _run_one_pool(FUZZ_SEED + idx)
+    else:
+        _run_one(FUZZ_SEED + idx)
+
+
+@pytest.mark.parametrize("idx", range(POOL_GRAPHS))
+def test_fuzz_pool(idx):
+    """Always-on pooled sweep (smaller than the main grid); the nightly
+    REPRO_FUZZ_FLAVOR=pool job widens it and flips the main grid over to
+    the pool flavor too."""
+    _run_one_pool(FUZZ_SEED + 7919 + idx)
 
 
 # optional hypothesis pass over the same generator space

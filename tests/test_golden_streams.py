@@ -138,3 +138,50 @@ def test_program_chain_barrier_baseline():
     assert c.n_barriers == 1
     assert c.n_fences == 0
     assert step.n_drains == 0
+
+
+def _fanout_program():
+    """stem feeds TWO consumers (a residual-style branch): the consumers
+    must both be ordered behind the stem's final store, and the stem's
+    buffer must stay live past the first consumer."""
+    p = Program(hwspec.pynq())
+    x = p.input("x", (32, 64))
+    t = p.matmul(x, p.input("w0", (64, 64)),
+                 epilogue=Epilogue(shift=5, relu=True), name="stem")
+    a = p.matmul(t, p.input("w1", (64, 64)),
+                 epilogue=Epilogue(shift=5, relu=True), name="left")
+    b = p.matmul(t, p.input("w2", (48, 64)),
+                 epilogue=Epilogue(shift=5, relu=True), name="right")
+    p.output(a)
+    p.output(b)
+    return p
+
+
+def test_program_fanout_fenced_stream_shape():
+    """Golden snapshot for a fenced fan-out graph: both branch consumers
+    ride buffer fences (never a barrier), the recorded fence edge names
+    the in-flight producer, and the shared stem buffer is the single
+    arena intermediate — the fan-out liveness contract.  The second
+    consumer's fence publishes "all stores done", which includes the
+    stem's, so it carries no named edge (the producer already retired
+    from the live set)."""
+    c = _fanout_program().compile(use_cache=False)
+    (step,) = c.accel_steps
+    assert c.insn_count == 40
+    assert c.n_barriers == 0
+    assert c.n_fences == 2
+    assert step.fence_edges == ((2, 4),)     # stem -> left
+    assert step.n_drains == 0
+    assert c.describe() == (
+        "accel[stem,left,right: 40 insns, 0 barriers, 2 fences "
+        "(stem->left)] | arena 2048B/1 blocks for 1 intermediates "
+        "(0 reused) | staged 640B")
+
+
+def test_program_fanout_barrier_baseline_shape():
+    c = _fanout_program().compile(use_cache=False, fence_mode="barrier")
+    (step,) = c.accel_steps
+    assert c.insn_count == 45
+    assert c.n_barriers == 2
+    assert c.n_fences == 0
+    assert step.n_drains == 0

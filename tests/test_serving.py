@@ -183,6 +183,53 @@ def test_arena_recycles_dead_intermediates():
         np.testing.assert_array_equal(c(backend=b, **feeds), ref)
 
 
+def test_arena_fanout_keeps_pending_readers_live():
+    """ResNet-style branchy graph (stem feeding a deep main path AND a
+    late skip consumer): the liveness pass must keep the stem buffer
+    alive across the whole main path, recycle the main path's dead
+    intermediates, and hold the arena high-water + per-call DRAM
+    flatness — the residual/fan-out coverage the ROADMAP called for."""
+    rng = np.random.default_rng(12)
+    d = 64
+    ep = Epilogue(shift=6, relu=True)
+    x = rng.integers(-128, 128, size=(32, d), dtype=np.int8)
+    ws = [rng.integers(-128, 128, size=(d, d), dtype=np.int8)
+          for _ in range(6)]
+    p = Program()
+    t0 = p.matmul(p.input("x", x.shape), p.input("w0", ws[0].shape),
+                  epilogue=ep, name="stem")
+    t1 = p.matmul(t0, p.input("w1", ws[1].shape), epilogue=ep, name="main1")
+    t2 = p.matmul(t1, p.input("w2", ws[2].shape), epilogue=ep, name="main2")
+    t3 = p.matmul(t0, p.input("w3", ws[3].shape), epilogue=ep, name="skip")
+    p.output(p.matmul(t2, p.input("w4", ws[4].shape), epilogue=ep,
+                      name="head_a"))
+    p.output(p.matmul(t3, p.input("w5", ws[5].shape), epilogue=ep,
+                      name="head_b"))
+    c = p.compile(use_cache=False)
+    # 4 intermediates (stem, main1, main2, skip); stem is pinned by its
+    # pending skip reader, so the high-water is 3 fresh blocks and only
+    # one later intermediate can reuse a dead one
+    assert c.n_intermediates == 4
+    assert c.arena_blocks == 3, "fan-out liveness high-water changed"
+    assert c.arena_reuse_hits == 1
+    assert c.arena_bytes == 3 * 2048
+    r0 = matmul_reference(x, ws[0], ep)
+    r2 = matmul_reference(matmul_reference(r0, ws[1], ep), ws[2], ep)
+    want = {"head_a": matmul_reference(r2, ws[4], ep),
+            "head_b": matmul_reference(matmul_reference(r0, ws[3], ep),
+                                       ws[5], ep)}
+    feeds = {"x": x, **{f"w{i}": w for i, w in enumerate(ws)}}
+    for b in BACKENDS:
+        outs = c(backend=b, **feeds)
+        for name in want:
+            np.testing.assert_array_equal(outs[name], want[name],
+                                          err_msg=f"{b}/{name}")
+    mark = c.device.dram._next
+    for _ in range(10):
+        c(**feeds)
+    assert c.device.dram._next == mark, "fan-out serving grew DRAM"
+
+
 def test_arena_respects_liveness_across_cpu_steps():
     """A heterogeneous split (cpu_only middle conv) still reuses dead
     blocks and stays exact — host steps are DRAM liveness points."""
