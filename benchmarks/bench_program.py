@@ -359,8 +359,104 @@ def run_pool(requests: int = 64, out_json: str | None = None,
     return result
 
 
+def run_decode(sessions: int = 4, steps: int = 32,
+               out_json: str | None = None, quiet: bool = False) -> dict:
+    """Autoregressive-decode serving: the quantized 2-block decoder
+    (persistent KV caches, host attention segments) decodes `steps`
+    tokens for `sessions` concurrent sessions at pool sizes 1 and 4 on
+    the Pallas engine.  Pool 1 serializes the sessions on one slot
+    (every step swaps the resident KV state in and out); pool 4 gives
+    each session its own slot and gangs the same-step accelerator
+    segments into shared kernel launches.  Reports aggregate decode
+    steps/sec, p50/p99 per-step latency, and the per-slot DRAM-flat
+    invariant, and byte-checks every step against the eager numpy
+    reference before publishing numbers.  Writes
+    ``benchmarks/BENCH_decode.json`` — the tail-latency baseline for
+    later traffic-tier PRs."""
+    from repro.core.backend import PallasBackend
+    from repro.core.serve import DevicePool
+    from repro.models.vta_decoder import QuantDecoder
+
+    dec = QuantDecoder()
+    if 2 + steps > dec.cfg.s_max:
+        raise ValueError(f"steps {steps} + warmup exceed the KV capacity "
+                         f"{dec.cfg.s_max}")
+    compiled = dec.compile(use_cache=False)
+    eng = PallasBackend()
+    result = {"sessions": sessions, "steps": steps,
+              "workload": f"quantized {dec.cfg.n_blocks}-block decoder, "
+                          f"d={dec.cfg.d_model}, persistent KV "
+                          f"({compiled.persistent_bytes}B/session)",
+              "pools": {}}
+    for size in (1, 4):
+        with DevicePool(compiled, size=size, backend=eng) as pool:
+            sess = [pool.session() for _ in range(sessions)]
+            refs = [dec.reference() for _ in range(sessions)]
+            rng = np.random.default_rng(17)
+            for _ in range(2):                         # warm jit caches
+                xs = [rng.integers(-32, 32, (1, dec.cfg.d_model), np.int8)
+                      for _ in range(sessions)]
+                futs = [s.submit(x=x) for s, x in zip(sess, xs)]
+                for f, r, x in zip(futs, refs, xs):
+                    assert np.array_equal(f.wait(300), r.step(x))
+            pool.drain()
+            marks = [len(s.device.dram._allocs) for s in pool.slots]
+            lat = []
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                xs = [rng.integers(-32, 32, (1, dec.cfg.d_model), np.int8)
+                      for _ in range(sessions)]
+                ts = time.perf_counter()
+                futs = [s.submit(x=x) for s, x in zip(sess, xs)]
+                for f, r, x in zip(futs, refs, xs):
+                    got = f.wait(300)
+                    lat.append(time.perf_counter() - ts)
+                    assert np.array_equal(got, r.step(x)), \
+                        "pooled decode diverged from the eager numpy " \
+                        "reference — refusing to publish throughput"
+            wall = time.perf_counter() - t0
+            pool.drain()
+            flat = marks == [len(s.device.dram._allocs)
+                             for s in pool.slots]
+            assert flat, f"pool {size}: DRAM allocations grew during decode"
+            stats = pool.slot_stats()
+            lat_ms = np.sort(np.array(lat) * 1e3)
+            result["pools"][str(size)] = dict(
+                steps_per_sec=round(sessions * steps / wall, 1),
+                wall_s=round(wall, 4),
+                p50_step_ms=round(float(np.percentile(lat_ms, 50)), 3),
+                p99_step_ms=round(float(np.percentile(lat_ms, 99)), 3),
+                ganged_steps=sum(s.ganged_steps for s in stats),
+                session_swaps=sum(s.session_swaps for s in stats),
+                persist_hiwater_bytes=[s.persist_hiwater for s in stats],
+                dram_flat=flat, exact=True)
+    p1 = result["pools"]["1"]["steps_per_sec"]
+    p4 = result["pools"]["4"]["steps_per_sec"]
+    result["speedup_4v1_x"] = round(p4 / max(p1, 1e-9), 2)
+
+    if out_json is None:
+        out_json = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_decode.json")
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    if not quiet:
+        print(f"\ndecode serving ({result['workload']}; {sessions} "
+              f"sessions x {steps} steps):")
+        for size in ("1", "4"):
+            r = result["pools"][size]
+            print(f"  pool {size}: {r['steps_per_sec']:>7} steps/s agg, "
+                  f"p50 {r['p50_step_ms']} ms, p99 {r['p99_step_ms']} ms, "
+                  f"{r['ganged_steps']} ganged steps, "
+                  f"{r['session_swaps']} KV swaps, DRAM flat")
+        print(f"  speedup pool4 vs pool1: {result['speedup_4v1_x']}x")
+        print(f"-> {out_json}")
+    return result
+
+
 if __name__ == "__main__":
     run()
     run_conv()
     run_serving()
     run_pool()
+    run_decode()

@@ -64,6 +64,13 @@ def main() -> None:
     summary.append(("pool_serving", (time.perf_counter() - t0) * 1e6,
                     f"x{prow['speedup_4v1_x']} pool4 vs pool1"))
 
+    _section("Decode serving: persistent-KV decoder, 4 sessions, pool 1 vs 4")
+    t0 = time.perf_counter()
+    drow = bench_program.run_decode()
+    summary.append(("decode_serving", (time.perf_counter() - t0) * 1e6,
+                    f"x{drow['speedup_4v1_x']} pool4 vs pool1, "
+                    f"p99 {drow['pools']['4']['p99_step_ms']}ms"))
+
     _section("General conv2d fast path: coalesced vs eager (measured C2)")
     t0 = time.perf_counter()
     _, conv_speedup = bench_fig16_e2e.run_measured()

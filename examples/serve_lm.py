@@ -1,55 +1,96 @@
-"""End-to-end driver #3: batched serving with the VTA int8 path.
+"""End-to-end driver #3: autoregressive LM decode through the COMPILED
+serving stack.
 
-Runs the continuous-batching engine twice — float weights, then int8 PTQ
-weights through the VTA GEMM semantics — and compares outputs: the
-quantized deployment (the paper's §5 pipeline, lifted to LMs) should
-produce near-identical greedy decodes.
+Earlier revisions of this example drove the eager jax ``ServeEngine``;
+it now serves the quantized decoder (``models/vta_decoder``) through the
+compiled path end to end — the same program/compiler/pool machinery the
+rest of the repo benchmarks:
 
-Run:  PYTHONPATH=src python examples/serve_lm.py --arch llama3.2-3b
+  * every linear is an int8 accelerator matmul (weights staged once as
+    graph constants), attention is a host segment, and the KV caches
+    live in **persistent** DRAM buffers at stable addresses;
+  * one compiled program is one decode STEP, and each concurrent
+    dialogue is one ``DevicePool`` session — the scheduler swaps each
+    session's KV bytes in and out of its slot and gangs same-step
+    accelerator segments across slots;
+  * decode is fully autoregressive: the next embedding is chosen by
+    greedy argmax over the program's own logits, so one wrong byte
+    anywhere derails the whole token sequence — the final check is that
+    every pooled dialogue reproduces the eager numpy reference's tokens
+    exactly.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --sessions 4 --steps 24
 """
 import argparse
+import time
 
 import numpy as np
 
-from repro.configs import get_arch, reduced
-from repro.launch.serve import Request, ServeEngine
-from repro.models import transformer as T
-from repro.models.quantized import quantize_params
+from repro.core.serve import DevicePool
+from repro.models.vta_decoder import DecoderConfig, QuantDecoder
 
-import jax
+
+def greedy_decode_reference(dec: QuantDecoder, prompt_tok: int,
+                            steps: int) -> list:
+    """Eager numpy oracle: one dialogue, greedy argmax feedback."""
+    ref = dec.reference()
+    tok, out = prompt_tok, []
+    for _ in range(steps):
+        logits = ref.step(dec.token(tok))
+        tok = int(np.argmax(logits))
+        out.append(tok)
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--pool", type=int, default=2)
+    ap.add_argument("--blocks", type=int, default=2)
+    ap.add_argument("--backend", default="pallas",
+                    choices=["pallas", "simulator"])
     args = ap.parse_args()
 
-    cfg = reduced(get_arch(args.arch).model)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
-               for _ in range(args.requests)]
+    cfg = DecoderConfig(n_blocks=args.blocks,
+                        s_max=max(96, args.steps + 8))
+    dec = QuantDecoder(cfg)
+    compiled = dec.compile()
+    print(f"decoder: {cfg.n_blocks} blocks, d={cfg.d_model}, "
+          f"vocab={cfg.vocab}, {compiled.persistent_bytes} persistent "
+          f"B/session (KV caches at stable DRAM addresses)")
 
-    results = {}
-    for mode, p in (("float", params),
-                    ("vta_int8", quantize_params(params))):
-        engine = ServeEngine(cfg, p, batch_slots=4)
-        reqs = [Request(rid=i, prompt=pr, max_new=args.max_new)
-                for i, pr in enumerate(prompts)]
-        done = engine.run(reqs)
-        results[mode] = {r.rid: r.out_tokens for r in done}
-        print(f"{mode}: served {len(done)} requests")
+    prompts = [7 * i + 3 for i in range(args.sessions)]
+    want = [greedy_decode_reference(dec, p, args.steps) for p in prompts]
 
-    agree = 0
-    total = 0
-    for rid in results["float"]:
-        a, b = results["float"][rid], results["vta_int8"][rid]
-        agree += sum(x == y for x, y in zip(a, b))
-        total += len(a)
-    print(f"int8 vs float greedy-token agreement: {agree}/{total} "
-          f"({agree / total:.0%}) — the PTQ deployment preserves decodes")
+    with DevicePool(compiled, size=args.pool, backend=args.backend) as pool:
+        sess = [pool.session() for _ in range(args.sessions)]
+        toks = list(prompts)
+        decoded = [[] for _ in range(args.sessions)]
+        t0 = time.perf_counter()
+        for _ in range(args.steps):
+            # lockstep round: same-step sessions gang their accel segments
+            futs = [s.submit(x=dec.token(t)) for s, t in zip(sess, toks)]
+            for i, fut in enumerate(futs):
+                nxt = int(np.argmax(fut.wait(timeout=300)))
+                decoded[i].append(nxt)
+                toks[i] = nxt
+        dt = time.perf_counter() - t0
+        gangs = sum(s.ganged_steps for s in pool.slot_stats())
+        print(f"served {args.sessions} dialogues x {args.steps} greedy "
+              f"steps on {len(pool)} slots in {dt:.2f}s "
+              f"({args.sessions * args.steps / dt:.1f} steps/s agg, "
+              f"{gangs} ganged segments)")
+        print("\n".join(pool.describe().splitlines()[1:]))
+
+    for i, (got, ref) in enumerate(zip(decoded, want)):
+        assert got == ref, (f"dialogue {i} diverged from the eager "
+                            f"reference: {got} vs {ref}")
+    print("all pooled dialogues reproduce the eager numpy reference's "
+          "greedy tokens exactly:")
+    for i, seq in enumerate(decoded):
+        print(f"  dialogue {i} (prompt {prompts[i]:>3}): "
+              + " ".join(f"{t:>2}" for t in seq))
 
 
 if __name__ == "__main__":

@@ -29,8 +29,16 @@ safe live here:
 
 Every fence and barrier is also a **DRAM liveness point**: all earlier
 ops' loads are complete once it retires, so the program builder's arena
-allocator (see ``program._build``) recycles dead intermediate buffers
-exactly at these placements — ``out_alloc(sync=True)`` below.
+allocator (:class:`ArenaAllocator` below, driven by ``program._build``)
+recycles dead intermediate buffers exactly at these placements —
+``out_alloc(sync=True)``.
+
+The arena serves *intermediates only*.  Buffers in the **persistent**
+liveness class — graph inputs, program outputs, and
+``Program.persistent()`` state that survives across calls (KV caches,
+recurrent state) — are allocated once at stable addresses outside the
+arena and are never recycled: a persistent buffer's bytes written by
+call N must still be there when call N+1's stream reads them.
 """
 from __future__ import annotations
 
@@ -66,6 +74,75 @@ class AccelStep:
 class CpuStep:
     """One host-side op executed between accelerator segments."""
     node_id: int
+
+
+class ArenaAllocator:
+    """DRAM liveness arena for intermediate buffers.
+
+    Best-fit over the free list with **block splitting**: when a dead
+    block is larger than the request, only the aligned prefix is handed
+    out and the tail returns to the free pool immediately — long-lived
+    residents (e.g. a graph whose early layers produced one huge
+    intermediate) no longer pin their whole birth size against later
+    small allocations.  All sizes are rounded up to ``align`` at birth so
+    a split tail is itself a valid, aligned block.
+
+    The caller drives liveness: :meth:`alloc` records each block's last
+    reader, :meth:`release_dead` (called only at fence / barrier /
+    segment sync points, where every earlier op's loads are ordered
+    before any later op's stores) returns expired blocks to the free
+    list.  Persistent buffers never enter the arena — they are allocated
+    by the program builder directly at stable addresses.
+    """
+
+    def __init__(self, alloc_fn: Callable[[int, int], int], align: int):
+        self.align = align
+        self._alloc = alloc_fn                  # (nbytes, align) -> addr
+        self.free: List[Tuple[int, int]] = []           # (size, addr)
+        # (last_use, size, addr): allocated, awaiting its last reader
+        self.pending: List[Tuple[int, int, int]] = []
+        self.bytes = 0            # fresh DRAM backing the arena
+        self.blocks = 0
+        self.reuse_hits = 0       # requests served from a dead block
+        self.splits = 0           # dead blocks split on best-fit reuse
+        self.intermediates = 0    # total requests
+
+    def release_dead(self, before_idx: int) -> None:
+        """Return blocks whose last reader precedes `before_idx` to the
+        free pool.  Only call at sync points — recycling a buffer whose
+        reader is still in flight would race through DRAM."""
+        still = []
+        for lu, size, addr in self.pending:
+            if lu < before_idx:
+                self.free.append((size, addr))
+            else:
+                still.append((lu, size, addr))
+        self.pending[:] = still
+
+    def alloc(self, nbytes: int, last_use: int) -> int:
+        """One intermediate buffer of `nbytes`, live until `last_use`."""
+        self.intermediates += 1
+        need = -(-nbytes // self.align) * self.align
+        best = None
+        for bi, (size, _) in enumerate(self.free):
+            if size >= need and (best is None
+                                 or size < self.free[best][0]):
+                best = bi
+        if best is not None:
+            size, addr = self.free.pop(best)
+            self.reuse_hits += 1
+            if size - need >= self.align:
+                # split: hand out the aligned prefix, free the tail
+                self.free.append((size - need, addr + need))
+                self.splits += 1
+                size = need
+            self.pending.append((last_use, size, addr))
+            return addr
+        addr = self._alloc(need, self.align)
+        self.bytes += need
+        self.blocks += 1
+        self.pending.append((last_use, need, addr))
+        return addr
 
 
 def _largest_gap(depth: int, taken: Sequence[Tuple[int, int]]) -> Tuple[int, int]:

@@ -31,6 +31,21 @@ at compile time, and a liveness pass recycles dead intermediate buffers
 through a fixed-size arena — repeat calls perform zero DRAM allocation,
 so the memory image stays constant across arbitrarily long serving loops
 (counter-tested).
+
+Three DRAM liveness classes exist:
+
+  * **constants** (``Program.constant``) — staged once at compile time,
+    read-only forever after;
+  * **intermediates** — recycled through the arena, dead at their last
+    reader within one call;
+  * **persistent** state (``Program.persistent``) — buffers that survive
+    ACROSS calls: KV caches, recurrent state, accumulators.  They are
+    allocated once at stable addresses, excluded from arena recycling,
+    excluded from per-call input staging, and mutated in place by host
+    ops declared with ``Program.host(..., updates=(ref, ...))``.  A
+    compiled program with persistent state is a *session*: calling it N
+    times advances the state N steps, and ``serve.DevicePool`` clones
+    give every pool slot its own independent session state.
 """
 from __future__ import annotations
 
@@ -43,7 +58,7 @@ import numpy as np
 
 from . import hwspec as _hwspec, layout
 from .backend import BackendLike, resolve_backend
-from .compiler import AccelStep, CpuStep, SegmentBuilder
+from .compiler import AccelStep, ArenaAllocator, CpuStep, SegmentBuilder
 from .conv import (ConvShape, conv2d_reference, lower_conv1x1,
                    lower_conv2d, lower_conv_im2col, select_conv_lowering)
 from .hwspec import HardwareSpec
@@ -179,6 +194,11 @@ class Node:
     fn: Optional[Callable] = None
     fn_key: Optional[str] = None   # stable cache key for host fns
     const: Optional[np.ndarray] = None  # graph constant: staged at compile
+    # persistent liveness class: the buffer survives across calls (its
+    # init image is in `const`); `updates` on a cpu node names the
+    # persistent nodes its fn mutates in place each call
+    persistent: bool = False
+    updates: Tuple[int, ...] = ()
 
 
 def _epilogue_sig(ep: Optional[Epilogue]):
@@ -258,6 +278,47 @@ class Program:
         return self._add(Node(idx=len(self.nodes), op="input", name=name,
                               shape=tuple(arr.shape), declared_dtype=dtype,
                               const=arr))
+
+    def persistent(self, name: str, shape: Sequence[int],
+                   dtype: str = "int8", kind: Optional[str] = None,
+                   block: Optional[int] = None,
+                   init: Optional[np.ndarray] = None) -> TensorRef:
+        """Persistent-state buffer: DRAM that SURVIVES across calls.
+
+        The buffer is allocated once at a stable address (outside the
+        intermediate arena, never recycled), its init image (`init`, or
+        zeros) is staged at compile time like a constant, and calls
+        neither stage nor require it as an input.  Accelerator ops may
+        read it like any graph tensor; host ops mutate it in place via
+        ``host(..., updates=(ref, ...))``.  This is the liveness class a
+        KV cache or recurrent state lives in: zero per-call allocation,
+        state advancing call over call, per-device-clone isolation (each
+        ``serve.DevicePool`` slot owns its own copy = its own session).
+
+        kind/block fix the DRAM layout up front (host ops require a
+        bound layout): by default 2-D int8 buffers are "mat" blocked by
+        BLOCK_IN (consumable as a matmul A operand), 1-D buffers are
+        "vec" lanes, 4-D are "conv"."""
+        spec = self.spec
+        shape = tuple(shape)
+        if kind is None:
+            kind = {1: "vec", 2: "mat", 4: "conv"}.get(len(shape))
+            if kind is None:
+                raise ValueError(f"cannot infer layout kind for a "
+                                 f"{len(shape)}-D persistent buffer; "
+                                 "pass kind=")
+        if block is None:
+            block = spec.block_out if kind == "vec" else spec.block_in
+        meta = TensorMeta(kind, shape, dtype, block)
+        if init is None:
+            init = np.zeros(shape, meta.np_dtype())
+        init = np.asarray(init, meta.np_dtype())
+        if init.shape != shape:
+            raise ValueError(f"persistent {name!r} init shape {init.shape}"
+                             f" != {shape}")
+        return self._add(Node(idx=len(self.nodes), op="input", name=name,
+                              shape=shape, declared_dtype=dtype, meta=meta,
+                              const=init, persistent=True))
 
     def matmul(self, a: TensorRef, w: TensorRef,
                epilogue: Optional[Epilogue] = None,
@@ -355,26 +416,39 @@ class Program:
 
     def host(self, fn: Callable, *args: TensorRef,
              shape: Sequence[int], kind: str = "conv", dtype: str = "int8",
-             name: Optional[str] = None, key: Optional[str] = None
-             ) -> TensorRef:
+             name: Optional[str] = None, key: Optional[str] = None,
+             updates: Sequence[TensorRef] = ()) -> TensorRef:
         """Arbitrary host-side op on logical numpy arrays; splits the
         stream into accelerator segments around it.  Inputs must already
         have a bound layout (consume them with a typed op first, or use
         typed inputs).  Programs containing keyless host fns are not
-        eligible for the compile cache."""
+        eligible for the compile cache.
+
+        ``updates`` names persistent buffers this op mutates: the fn must
+        then return ``(out, new_value, ...)`` — one extra array per
+        update target, written back into the persistent buffer in place
+        before the next step runs.  This is how a KV cache appends: pass
+        the cache ref in ``args`` (to read it) AND in ``updates`` (to
+        write the appended image back)."""
         spec = self.spec
         for r in args:
             if self._node(r).meta is None:
                 raise ValueError(
                     f"host-op input {self._node(r).name!r} has no bound "
                     "layout yet — consume it with a typed op first")
+        for r in updates:
+            if not self._node(r).persistent:
+                raise ValueError(
+                    f"host-op update target {self._node(r).name!r} is not "
+                    "a persistent buffer — only Program.persistent() "
+                    "state may be mutated across calls")
         block = spec.block_out if kind == "vec" else spec.block_in
         idx = len(self.nodes)
         return self._add(Node(
             idx=idx, op="cpu", name=name or f"host{idx}",
             inputs=tuple(r.idx for r in args), shape=tuple(shape),
             meta=TensorMeta(kind, tuple(shape), dtype, block),
-            fn=fn, fn_key=key))
+            fn=fn, fn_key=key, updates=tuple(r.idx for r in updates)))
 
     def output(self, ref: TensorRef) -> TensorRef:
         self._node(ref)
@@ -398,7 +472,8 @@ class Program:
                     np.ascontiguousarray(n.const).tobytes()).hexdigest()
             rows.append((n.op, n.name, n.inputs, n.shape,
                          n.meta, _epilogue_sig(n.epilogue), n.conv,
-                         n.alu_op, n.lowering, n.fn_key, const_sig))
+                         n.alu_op, n.lowering, n.fn_key, const_sig,
+                         n.persistent, n.updates))
         return (self.spec, self.virtual_threads, tuple(rows),
                 tuple(self._outputs))
 
@@ -450,59 +525,29 @@ def _build(prog: Program, fence_mode: str = "buffer",
     for n in prog.nodes:
         for i in n.inputs:
             last_use[i] = n.idx
-    persistent = {n.idx for n in prog.nodes if n.op == "input"} | set(out_ids)
-    # one block per recycled buffer; a block keeps its birth size forever
-    arena_free: List[Tuple[int, int]] = []          # (size, addr)
-    pending_free: List[Tuple[int, int, int]] = []   # (last_use, size, addr)
+    stable = {n.idx for n in prog.nodes if n.op == "input"} | set(out_ids)
     arena_align = max(spec.inp_elem_bytes, spec.wgt_elem_bytes,
                       spec.acc_elem_bytes, spec.out_elem_bytes)
-    arena = dict(bytes=0, blocks=0, reuse_hits=0, intermediates=0)
-
-    def release_dead(before_idx: int) -> None:
-        """Return blocks whose last reader precedes `before_idx` to the
-        free pool.  Only called at sync points (fence / barrier / segment
-        boundary): every earlier op's loads are ordered before any later
-        op's stores there, so recycling cannot race through DRAM."""
-        still = []
-        for lu, size, addr in pending_free:
-            if lu < before_idx:
-                arena_free.append((size, addr))
-            else:
-                still.append((lu, size, addr))
-        pending_free[:] = still
+    arena = ArenaAllocator(lambda nb, al: rt.buffer_alloc(nb, align=al),
+                           arena_align)
 
     def alloc_node(n: Node, sync: bool) -> int:
         """Assign node n's output DRAM buffer (idempotent).  sync=True
         marks a fence/barrier/segment placement — the arena may recycle
-        dead intermediates (see release_dead)."""
+        dead intermediates (see ArenaAllocator.release_dead); only there
+        is every earlier op's load ordered before any later op's store,
+        so recycling cannot race through DRAM.  Inputs, program outputs
+        and persistent buffers are stable: fresh, arena-exempt
+        addresses."""
         if sync:
-            release_dead(n.idx)
+            arena.release_dead(n.idx)
         if n.idx in addrs:
             return addrs[n.idx]
         nbytes = n.meta.nbytes(spec)
-        addr = None
-        if n.idx not in persistent:
-            arena["intermediates"] += 1
-            # best fit among free blocks
-            best = None
-            for bi, (size, a) in enumerate(arena_free):
-                if size >= nbytes and (best is None
-                                       or size < arena_free[best][0]):
-                    best = bi
-            if best is not None:
-                size, addr = arena_free.pop(best)
-                arena["reuse_hits"] += 1
-                pending_free.append((last_use.get(n.idx, 1 << 30),
-                                     size, addr))
-        if addr is None:
-            if n.idx in persistent:
-                addr = rt.buffer_alloc(nbytes, align=n.meta.elem_bytes(spec))
-            else:
-                addr = rt.buffer_alloc(nbytes, align=arena_align)
-                arena["bytes"] += nbytes
-                arena["blocks"] += 1
-                pending_free.append((last_use.get(n.idx, 1 << 30),
-                                     nbytes, addr))
+        if n.idx in stable:
+            addr = rt.buffer_alloc(nbytes, align=n.meta.elem_bytes(spec))
+        else:
+            addr = arena.alloc(nbytes, last_use.get(n.idx, 1 << 30))
         addrs[n.idx] = addr
         return addr
 
@@ -629,16 +674,22 @@ def _build(prog: Program, fence_mode: str = "buffer",
     input_ids = {n.name: n.idx for n in prog.nodes if n.op == "input"}
     const_names = {n.name for n in prog.nodes
                    if n.op == "input" and n.const is not None}
+    persistent_ids = [n.idx for n in prog.nodes if n.persistent]
     return CompiledProgram(spec=spec, nodes=list(prog.nodes), addrs=addrs,
                            steps=steps, input_ids=input_ids,
                            output_ids=out_ids, device=rt.device,
                            fence_mode=fence_mode, prestage=prestage,
                            const_names=const_names,
                            staged_bytes=staged_bytes,
-                           arena_bytes=arena["bytes"],
-                           arena_blocks=arena["blocks"],
-                           arena_reuse_hits=arena["reuse_hits"],
-                           n_intermediates=arena["intermediates"])
+                           arena_bytes=arena.bytes,
+                           arena_blocks=arena.blocks,
+                           arena_reuse_hits=arena.reuse_hits,
+                           arena_splits=arena.splits,
+                           n_intermediates=arena.intermediates,
+                           persistent_ids=persistent_ids,
+                           persistent_bytes=sum(
+                               prog.nodes[i].meta.nbytes(spec)
+                               for i in persistent_ids))
 
 
 # ----------------------------------------------------------------------
@@ -682,7 +733,10 @@ class CompiledProgram:
     arena_bytes: int = 0           # fresh DRAM backing the intermediate arena
     arena_blocks: int = 0
     arena_reuse_hits: int = 0      # intermediates served from a dead block
+    arena_splits: int = 0          # free blocks split on best-fit reuse
     n_intermediates: int = 0
+    persistent_ids: List[int] = field(default_factory=list)
+    persistent_bytes: int = 0      # cross-call state at stable addresses
     calls: int = 0
     last_staging_bytes: int = 0    # bytes staged by the most recent call
     last_stats: List[RunStats] = field(default_factory=list)
@@ -712,6 +766,10 @@ class CompiledProgram:
     @property
     def n_fences(self) -> int:
         return sum(s.n_fences for s in self.accel_steps)
+
+    @property
+    def persistent_names(self) -> List[str]:
+        return [self.nodes[i].name for i in self.persistent_ids]
 
     def describe(self) -> str:
         """One line per step; conv nodes carry their resolved lowering
@@ -746,8 +804,14 @@ class CompiledProgram:
         chain = " -> ".join(parts)
         tail = (f" | arena {self.arena_bytes}B/{self.arena_blocks} blocks "
                 f"for {self.n_intermediates} intermediates "
-                f"({self.arena_reuse_hits} reused)"
+                f"({self.arena_reuse_hits} reused, "
+                f"{self.arena_splits} split)"
                 f" | staged {self.staged_bytes}B")
+        if self.persistent_ids:
+            names = ",".join(
+                f"{self.nodes[i].name}@{self.addrs[i]:#x}"
+                for i in self.persistent_ids)
+            tail += f" | persistent {self.persistent_bytes}B ({names})"
         return chain + tail
 
     # ---- data movement -------------------------------------------------
@@ -771,6 +835,50 @@ class CompiledProgram:
             self.addrs[nid], meta.nbytes(self.spec),
             dtype=meta.np_dtype(), shape=meta.blocked_shape(self.spec))
         return meta.unpack(blocked, self.spec)
+
+    # ---- persistent state (sessions) -----------------------------------
+    def read_persistent(self, name: str, device: Any = None) -> np.ndarray:
+        """Logical (unpacked) value of one persistent buffer on `device`."""
+        nid = self.input_ids[name]
+        if not self.nodes[nid].persistent:
+            raise ValueError(f"{name!r} is not a persistent buffer")
+        return self._read(nid, device=device)
+
+    def write_persistent(self, name: str, arr: np.ndarray,
+                         device: Any = None) -> None:
+        nid = self.input_ids[name]
+        if not self.nodes[nid].persistent:
+            raise ValueError(f"{name!r} is not a persistent buffer")
+        self._write(nid, arr, device=device)
+
+    def reset_persistent(self, device: Any = None) -> None:
+        """Rewind `device`'s session state to the compile-time init
+        images (a fresh session on the same slot)."""
+        for nid in self.persistent_ids:
+            self._write(nid, self.nodes[nid].const, device=device)
+
+    def persistent_image(self, device: Any = None) -> Dict[str, np.ndarray]:
+        """Raw blocked bytes of every persistent buffer on `device` — the
+        portable session state.  Paired with :meth:`load_persistent_image`
+        this is how the serving layer swaps sessions on a slot: plain
+        DRAM writes at stable addresses, never an allocation, so the
+        trimmed-clone zero-alloc contract holds across swaps."""
+        dev = device if device is not None else self.device
+        img = {}
+        for nid in self.persistent_ids:
+            n = self.nodes[nid]
+            img[n.name] = dev.dram.read(
+                self.addrs[nid], n.meta.nbytes(self.spec))
+        return img
+
+    def load_persistent_image(self, image: Dict[str, np.ndarray],
+                              device: Any = None) -> None:
+        dev = device if device is not None else self.device
+        for nid in self.persistent_ids:
+            n = self.nodes[nid]
+            raw = image[n.name]
+            dev.dram.write(self.addrs[nid], raw)
+            dev.flush_cache(self.addrs[nid], raw.nbytes)
 
     # ---- execution -----------------------------------------------------
     def check_inputs(self, inputs: Dict[str, np.ndarray]) -> None:
@@ -808,10 +916,21 @@ class CompiledProgram:
                                     timing=timing)
             stats.n_join_barriers = step.n_barriers
             stats.n_buffer_fences = step.n_fences
+            stats.persistent_bytes = self.persistent_bytes
             return stats
         node = self.nodes[step.node_id]
         args = [self._read(i, device=device) for i in node.inputs]
-        self._write(step.node_id, node.fn(*args), device=device)
+        res = node.fn(*args)
+        if node.updates:
+            # fn returned (out, new_state, ...): write each new state
+            # image back into its persistent buffer IN PLACE — same
+            # stable address every call, never an allocation
+            out, *new_state = res
+            for nid, arr in zip(node.updates, new_state):
+                self._write(nid, arr, device=device)
+        else:
+            out = res
+        self._write(step.node_id, out, device=device)
         return None
 
     def read_outputs(self, device: Any = None

@@ -29,6 +29,17 @@ submit()/wait() API.
   * :class:`BatchServer` — shards a batch of requests across the pool
     and gathers results in submission order.
 
+  * :class:`Session` — persistent-state serving (``Program.persistent``
+    buffers: KV caches, recurrent state).  ``pool.session()`` pins a
+    session to one slot; its submits run in order on that slot, each
+    call advancing the session's state in the slot's DRAM.  When several
+    sessions share a slot the scheduler swaps the resident state — raw
+    DRAM reads/writes at the stable persistent addresses, never an
+    allocation, so the trimmed-clone zero-alloc contract survives
+    arbitrary session interleavings.  The scheduler still gangs only
+    same-program same-step requests, so concurrent decode sessions at
+    the same step share kernel launches.
+
 The simulator engine has no gang mode; a pool over ``backend=
 "simulator"`` runs its slots serially and acts as the concurrency
 oracle: the differential suite byte-diffs every pooled execution against
@@ -112,6 +123,11 @@ class SlotStats:
     ganged_steps: int = 0           # accel steps executed in a gang > 1
     tiles_resolved: int = 0
     tile_batches: int = 0
+    # persistent-state serving: resident-session swaps performed on this
+    # slot, and the high-water of persistent bytes this slot has held
+    # for its sessions (resident + swapped-out store)
+    session_swaps: int = 0
+    persist_hiwater: int = 0
 
 
 @dataclass
@@ -121,6 +137,9 @@ class _Slot:
     stats: SlotStats = field(default_factory=SlotStats)
     queue: List["_Request"] = field(default_factory=list)
     active: Optional["_Request"] = None
+    # sid of the session whose persistent state is materialized in this
+    # slot's DRAM (None: virgin init state / slot-resident mode)
+    resident: Optional[int] = None
 
     @property
     def load(self) -> int:
@@ -128,10 +147,64 @@ class _Slot:
 
 
 @dataclass
+class _SessionState:
+    """Pool-internal record of one session: its sticky slot and, when
+    NOT resident there, the swapped-out raw persistent image."""
+    sid: int
+    slot_id: int
+    image: Optional[Dict[str, np.ndarray]] = None
+    calls: int = 0
+
+
+@dataclass
 class _Request:
     future: PoolFuture
     inputs: Dict[str, np.ndarray]
     step_idx: int = -1              # -1: inputs not yet staged
+    session: Optional[_SessionState] = None
+
+
+class Session:
+    """Handle to one persistent-state serving session on a DevicePool.
+
+        sess = pool.session()
+        for tok in prompt:
+            y = sess.submit(x=tok).wait()    # state advances in DRAM
+
+    Submits are sticky to one slot and run in submission order there;
+    sessions sharing a slot are transparently swapped by the scheduler.
+    ``state()``/``reset()`` inspect or rewind the session — call them
+    only while the session has no in-flight requests (``pool.drain()``)."""
+
+    def __init__(self, pool: "DevicePool", state: _SessionState):
+        self.pool = pool
+        self._state = state
+
+    @property
+    def sid(self) -> int:
+        return self._state.sid
+
+    @property
+    def slot_id(self) -> int:
+        return self._state.slot_id
+
+    @property
+    def calls(self) -> int:
+        return self._state.calls
+
+    def submit(self, **inputs: np.ndarray) -> PoolFuture:
+        return self.pool._enqueue(inputs, session=self._state)
+
+    def state(self, name: str) -> np.ndarray:
+        """Logical value of one persistent buffer as this session sees it
+        (resident slot DRAM, swapped-out image, or the init image if the
+        session never ran)."""
+        return self.pool._session_state(self._state, name)
+
+    def reset(self) -> None:
+        """Rewind to the compile-time init images (a fresh dialogue on
+        the same session handle)."""
+        self.pool._session_reset(self._state)
 
 
 # ----------------------------------------------------------------------
@@ -178,6 +251,9 @@ class DevicePool:
                       for i in range(size)]
         self._rr = itertools.cycle(range(size))
         self._seq = itertools.count()
+        self._sessions: Dict[int, _SessionState] = {}
+        self._session_seq = itertools.count()
+        self._session_rr = itertools.cycle(range(size))
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
         self._closed = False
@@ -213,20 +289,102 @@ class DevicePool:
         """Enqueue one request; returns immediately with a future.
         Thread-safe: any thread may submit, waits may happen in any
         order.  Input arrays are validated here (fail fast, in the
-        caller) and staged into the slot's DRAM by the scheduler."""
+        caller) and staged into the slot's DRAM by the scheduler.  For a
+        program with persistent state, sessionless submits run in
+        slot-resident mode (each slot IS one implicit session); use
+        :meth:`session` for explicit, swappable sessions."""
+        return self._enqueue(inputs, session=None)
+
+    def _enqueue(self, inputs: Dict[str, np.ndarray],
+                 session: Optional[_SessionState]) -> PoolFuture:
         self.compiled.check_inputs(inputs)
         with self._lock:
             if self._closed:
                 raise PoolClosed("submit() on a closed DevicePool")
-            if self.policy == "round_robin":
+            if session is not None:
+                slot = self.slots[session.slot_id]   # sticky: state lives
+            elif self.policy == "round_robin":       # (or swaps) there
                 slot = self.slots[next(self._rr)]
             else:
                 slot = min(self.slots, key=lambda s: (s.load, s.id))
             fut = PoolFuture(slot_id=slot.id, seq=next(self._seq))
-            slot.queue.append(_Request(future=fut, inputs=dict(inputs)))
+            slot.queue.append(_Request(future=fut, inputs=dict(inputs),
+                                       session=session))
             self._inflight += 1
             self._wake.notify_all()
         return fut
+
+    # ------------------------------------------------------------------
+    # sessions (persistent-state serving)
+    # ------------------------------------------------------------------
+    def session(self, slot: Optional[int] = None) -> Session:
+        """Open a new session: an independent copy of the program's
+        persistent state, pinned to one slot (round-robin by default).
+        Same-slot sessions are swapped in and out of the slot's DRAM by
+        the scheduler; same-step submits of different sessions still
+        gang across slots."""
+        with self._lock:
+            if self._closed:
+                raise PoolClosed("session() on a closed DevicePool")
+            sid = next(self._session_seq)
+            slot_id = slot if slot is not None else next(self._session_rr)
+            if not 0 <= slot_id < len(self.slots):
+                raise ValueError(f"slot {slot_id} out of range")
+            st = _SessionState(sid=sid, slot_id=slot_id)
+            self._sessions[sid] = st
+        return Session(self, st)
+
+    def _ensure_resident(self, slot: _Slot, req: _Request) -> None:
+        """Make `req`'s session state resident in `slot` before the
+        request stages.  Swaps are raw DRAM reads/writes at the stable
+        persistent addresses — NEVER an allocation, so trimmed clones
+        stay within the zero-alloc contract.  Scheduler-thread only."""
+        compiled = self.compiled
+        sess = req.session
+        if sess is None or not compiled.persistent_ids:
+            return
+        if slot.resident == sess.sid:
+            return
+        if slot.resident is not None:
+            old = self._sessions.get(slot.resident)
+            if old is not None:
+                old.image = compiled.persistent_image(device=slot.device)
+        if sess.image is not None:
+            compiled.load_persistent_image(sess.image, device=slot.device)
+            sess.image = None                      # resident now
+        else:
+            compiled.reset_persistent(device=slot.device)
+        slot.resident = sess.sid
+        slot.stats.session_swaps += 1
+        held = compiled.persistent_bytes + sum(
+            sum(a.nbytes for a in s.image.values())
+            for s in self._sessions.values()
+            if s.slot_id == slot.id and s.image is not None)
+        slot.stats.persist_hiwater = max(slot.stats.persist_hiwater, held)
+
+    def _session_state(self, st: _SessionState, name: str) -> np.ndarray:
+        compiled = self.compiled
+        with self._lock:
+            slot = self.slots[st.slot_id]
+            if slot.resident == st.sid:
+                return compiled.read_persistent(name, device=slot.device)
+            nid = compiled.input_ids[name]
+            node = compiled.nodes[nid]
+            if st.image is None:                   # never ran
+                return np.array(node.const)
+            raw = st.image[name]
+            blocked = raw.view(node.meta.np_dtype()).reshape(
+                node.meta.blocked_shape(compiled.spec))
+            return node.meta.unpack(blocked, compiled.spec)
+
+    def _session_reset(self, st: _SessionState) -> None:
+        with self._lock:
+            slot = self.slots[st.slot_id]
+            if slot.resident == st.sid:
+                self.compiled.reset_persistent(device=slot.device)
+            else:
+                st.image = None
+            st.calls = 0
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted request has completed."""
@@ -323,11 +481,14 @@ class DevicePool:
         then retire finished ones."""
         compiled = self.compiled
 
-        # stage inputs of freshly admitted requests
+        # stage inputs of freshly admitted requests (swapping the slot's
+        # resident session state first when the request belongs to a
+        # different session than the last one served here)
         for slot in active:
             req = slot.active
             if req.step_idx < 0:
                 try:
+                    self._ensure_resident(slot, req)
                     req.future.staging_bytes = compiled.stage_inputs(
                         req.inputs, device=slot.device)
                     slot.stats.staging_bytes += req.future.staging_bytes
@@ -427,6 +588,8 @@ class DevicePool:
                 req.future._finish(
                     self.compiled.read_outputs(device=slot.device))
                 slot.stats.calls += 1
+                if req.session is not None:
+                    req.session.calls += 1
             except BaseException as e:
                 req.future._fail(e)
         with self._lock:
@@ -445,13 +608,22 @@ class DevicePool:
         lines = [self.compiled.describe(),
                  f"pool[{len(self.slots)} slots, {self.engine.name}, "
                  f"{self.policy}]"]
+        stateful = bool(self.compiled.persistent_ids)
         for s in self.slots:
             st = s.stats
-            lines.append(
+            line = (
                 f"  slot{s.id}: {st.calls} calls, {st.staging_bytes}B "
                 f"staged, {st.accel_steps} accel steps "
                 f"({st.ganged_steps} ganged), {st.cpu_steps} host steps, "
                 f"{st.tiles_resolved} tiles / {st.tile_batches} launches")
+            if stateful:
+                nsess = sum(1 for x in self._sessions.values()
+                            if x.slot_id == s.id)
+                res = "-" if s.resident is None else f"sid{s.resident}"
+                line += (f", {nsess} sessions ({res} resident, "
+                         f"{st.session_swaps} swaps, "
+                         f"{st.persist_hiwater}B hiwater)")
+            lines.append(line)
         return "\n".join(lines)
 
 

@@ -114,6 +114,10 @@ class RunStats:
     n_join_barriers: int = 0
     n_buffer_fences: int = 0
     staging_bytes_per_call: int = 0
+    # cross-call persistent state (KV caches, recurrent state) resident
+    # at stable DRAM addresses during this run — bytes that are neither
+    # staged per call nor recycled through the arena
+    persistent_bytes: int = 0
     # PallasBackend batched tile dispatch: lazily-coalesced accumulator
     # tiles resolved, and the number of kernel launches that resolved
     # them (tiles_resolved / tile_batches = batching factor)

@@ -44,6 +44,9 @@ def test_train_lm_short():
 
 
 def test_serve_lm():
-    out = _run("serve_lm.py", "--arch", "llama3.2-3b", "--requests", "2",
-               "--max-new", "6")
-    assert "agreement" in out
+    # pool-served greedy decode through the compiled path, 2 dialogues
+    out = _run("serve_lm.py", "--sessions", "2", "--steps", "6",
+               "--pool", "2")
+    assert "persistent B/session" in out
+    assert "ganged segments" in out
+    assert "reproduce the eager numpy reference" in out

@@ -46,11 +46,18 @@ FUZZ_GRAPHS = int(os.environ.get("REPRO_FUZZ_GRAPHS", "36"))
 FUZZ_SPEC = os.environ.get("REPRO_FUZZ_SPEC", "")
 # fuzz FLAVOR: "" = the cross-backend sweep below; "pool" = random
 # graphs served through a DevicePool with randomized submit order and
-# pool size, byte-diffed against serial execution (the nightly job runs
-# both).  A small always-on pool sweep keeps tier-1 coverage.
+# pool size, byte-diffed against serial execution; "persistent" = random
+# STATEFUL graphs (Program.persistent buffers mutated by host ops)
+# driven >=3 consecutive calls per engine and byte-diffed against a
+# stateful numpy reference AND across engines, whole DRAM images
+# included (the nightly job runs all three).  Small always-on pool and
+# persistent sweeps keep tier-1 coverage.
 FUZZ_FLAVOR = os.environ.get("REPRO_FUZZ_FLAVOR", "")
 POOL_GRAPHS = int(os.environ.get("REPRO_FUZZ_POOL_GRAPHS",
                                  "24" if FUZZ_FLAVOR == "pool" else "6"))
+PERSIST_GRAPHS = int(os.environ.get(
+    "REPRO_FUZZ_PERSIST_GRAPHS",
+    "24" if FUZZ_FLAVOR == "persistent" else "6"))
 
 _VEC_OPS = (AluOp.ADD, AluOp.MIN, AluOp.MAX, AluOp.MUL)
 
@@ -320,12 +327,143 @@ def _run_one_pool(seed: int) -> None:
 
 
 # ----------------------------------------------------------------------
+# persistent flavor: random stateful graphs run >=3 consecutive calls,
+# byte-diffed against a stateful numpy reference and across engines
+# ----------------------------------------------------------------------
+def _state_variant(rng):
+    """One of three in-place state mutations (accumulate / roll-in /
+    decay-accumulate) — all pure, deterministic numpy."""
+    kind = int(rng.integers(0, 3))
+
+    def accum(h, s):
+        ns = np.clip(s.astype(np.int32) + h.astype(np.int32),
+                     -128, 127).astype(np.int8)
+        return ns, ns
+
+    def roll(h, s):
+        ns = np.roll(s, 1, axis=0)
+        ns = ns.copy()
+        ns[0] = h[0]
+        out = np.clip(ns.astype(np.int32) + h.astype(np.int32),
+                      -128, 127).astype(np.int8)
+        return out, ns
+
+    def decay(h, s):
+        ns = np.clip((s.astype(np.int32) >> 1) + h.astype(np.int32),
+                     -128, 127).astype(np.int8)
+        return ns, ns
+
+    fn = (accum, roll, decay)[kind]
+    return fn, f"fuzz.state.{fn.__name__}"
+
+
+def build_random_persistent_program(rng):
+    """Random stateful graph: accel matmul feeds a host op that mutates a
+    persistent state buffer in place; optionally a second matmul consumes
+    the host output (accelerator reads data derived from cross-call
+    state).  Returns (program, make_feeds)."""
+    spec = _rand_spec(rng)
+    p = Program(spec, virtual_threads=int(rng.integers(1, 3)))
+    m = int(rng.integers(1, 2 * spec.batch + 1))
+    k = int(rng.integers(1, 33))
+    n = int(rng.integers(1, 33))
+    shapes = {"x": (m, k), "w0": (n, k)}
+    x = p.input("x", (m, k))
+    w0 = p.input("w0", (n, k))
+    h = p.matmul(x, w0, epilogue=Epilogue(shift=int(rng.integers(1, 6))),
+                 name="h")
+    s_init = rng.integers(-64, 64, size=(m, n), dtype=np.int8)
+    s = p.persistent("state", (m, n), init=s_init)
+    fn, key = _state_variant(rng)
+    t = p.host(fn, h, s, shape=(m, n), kind="mat", key=key,
+               updates=(s,), name="mut")
+    if rng.integers(0, 2):
+        n2 = int(rng.integers(1, 33))
+        shapes["w1"] = (n2, n)
+        t = p.matmul(t, p.input("w1", (n2, n)),
+                     epilogue=_rand_epilogue(rng, n2, spec), name="mm1")
+    p.output(t)
+
+    def make_feeds():
+        return {name: rng.integers(-64, 64, size=shp, dtype=np.int8)
+                for name, shp in shapes.items()}
+    return p, make_feeds
+
+
+def evaluate_reference_stateful(p: Program, calls):
+    """Numpy oracle over a sequence of calls: persistent buffers carry
+    across calls, host updates are applied in graph order.  Returns
+    (per-call output dicts, final persistent state by node id)."""
+    state = {nx.idx: np.array(nx.const) for nx in p.nodes if nx.persistent}
+    outs = []
+    for feeds in calls:
+        vals = {}
+        for nd in p.nodes:
+            if nd.op == "input":
+                vals[nd.idx] = state[nd.idx] if nd.persistent \
+                    else feeds[nd.name]
+            elif nd.op == "cpu":
+                res = nd.fn(*(vals[i] for i in nd.inputs))
+                if nd.updates:
+                    out, *upd = res
+                    for nid, arr in zip(nd.updates, upd):
+                        state[nid] = arr
+                else:
+                    out = res
+                vals[nd.idx] = out
+            elif nd.op == "matmul":
+                a, w = (vals[i] for i in nd.inputs)
+                vals[nd.idx] = matmul_reference(a, w, epilogue=nd.epilogue,
+                                                spec=p.spec)
+            else:
+                raise ValueError(nd.op)
+        outs.append({i: vals[i] for i in p._outputs})
+    return outs, state
+
+
+def _run_one_persistent(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    p, make_feeds = build_random_persistent_program(rng)
+    n_calls = int(rng.integers(3, 6))
+    calls = [make_feeds() for _ in range(n_calls)]
+    refs, ref_state = evaluate_reference_stateful(p, calls)
+    for fence_mode in ("buffer", "barrier"):
+        compiled = p.compile(use_cache=False, fence_mode=fence_mode)
+        ctx = f"seed={seed} fence_mode={fence_mode}"
+        devs = {eng: compiled.device.clone(trim=True)
+                for eng in ("simulator", "pallas")}
+        for eng, dev in devs.items():
+            for ci, feeds in enumerate(calls):
+                res = compiled.run_on(dev, backend=eng, inputs=feeds)
+                outs = res.outputs if isinstance(res.outputs, dict) else \
+                    {p.nodes[compiled.output_ids[0]].name: res.outputs}
+                for nid in compiled.output_ids:
+                    np.testing.assert_array_equal(
+                        outs[p.nodes[nid].name], refs[ci][nid],
+                        err_msg=f"{ctx} eng={eng} call={ci}: stateful "
+                                "output diverged from numpy reference")
+            for nid in compiled.persistent_ids:
+                np.testing.assert_array_equal(
+                    compiled._read(nid, device=dev), ref_state[nid],
+                    err_msg=f"{ctx} eng={eng}: final persistent state "
+                            "diverged from numpy reference")
+        # byte-identical WHOLE DRAM images after the same call sequence:
+        # stream staging, constants, arena recycling, persistent state
+        np.testing.assert_array_equal(
+            devs["simulator"].dram.mem, devs["pallas"].dram.mem,
+            err_msg=f"{ctx}: engines diverged somewhere in the DRAM "
+                    "image after the stateful call sequence")
+
+
+# ----------------------------------------------------------------------
 # the deterministic CI sweep (>= 50 graphs, fixed seed)
 # ----------------------------------------------------------------------
 @pytest.mark.parametrize("idx", range(FUZZ_GRAPHS))
 def test_fuzz_cross_backend(idx):
     if FUZZ_FLAVOR == "pool":
         _run_one_pool(FUZZ_SEED + idx)
+    elif FUZZ_FLAVOR == "persistent":
+        _run_one_persistent(FUZZ_SEED + idx)
     else:
         _run_one(FUZZ_SEED + idx)
 
@@ -336,6 +474,13 @@ def test_fuzz_pool(idx):
     REPRO_FUZZ_FLAVOR=pool job widens it and flips the main grid over to
     the pool flavor too."""
     _run_one_pool(FUZZ_SEED + 7919 + idx)
+
+
+@pytest.mark.parametrize("idx", range(PERSIST_GRAPHS))
+def test_fuzz_persistent(idx):
+    """Always-on stateful sweep; the nightly REPRO_FUZZ_FLAVOR=persistent
+    job widens it and flips the main grid over too."""
+    _run_one_persistent(FUZZ_SEED + 104729 + idx)
 
 
 # optional hypothesis pass over the same generator space
