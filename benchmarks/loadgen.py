@@ -1,0 +1,415 @@
+"""Open-loop traffic generator for the continuous-batching control plane.
+
+Closed-loop benchmarks (bench_program.run_pool) submit the next request
+the moment the last one returns, so the pool is always exactly full and
+always lockstep — the best case.  Real serving is open-loop: requests
+arrive on their own clock whether or not the server kept up, and greedy
+``DevicePool.submit()`` admits each one the moment a slot frees.  Under
+staggered arrivals the slots' step offsets desynchronize and, because
+the pool advances round by round, the stagger persists for the whole
+program: gangs stop forming and throughput collapses to serial.  The
+admission window (``core.sched``) exists to fix exactly this; this
+module measures by how much.
+
+Two seeded arrival processes (Poisson and bursty) at several offered
+loads drive two workloads — the shared-weight matmul graph (the gang
+showcase) and persistent-KV decode sessions — through both dispatch
+modes:
+
+  * ``greedy``   — straight ``pool.submit()`` at arrival time
+  * ``windowed`` — ``Scheduler.submit()`` (bounded admission window,
+                   auto or fixed gang width)
+
+and records open-loop latency (arrival -> completion, parking included)
+p50/p99 plus aggregate calls/sec per (trace, load, mode) cell into
+``benchmarks/BENCH_traffic.json`` — the standing tail-latency wall later
+PRs get measured against.  Every completed output is byte-checked
+against serial single-device execution before any number is published.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import DevicePool, Program, SchedConfig, Scheduler, hwspec
+from repro.core.backend import PallasBackend
+from repro.core.scheduler import Epilogue, matmul_reference
+
+POOL_SIZE = 4
+
+
+# ----------------------------------------------------------------------
+# arrival traces (seeded, offsets in seconds from t0)
+# ----------------------------------------------------------------------
+def poisson_trace(rate_rps: float, n: int, rng: np.random.Generator
+                  ) -> np.ndarray:
+    """Memoryless arrivals: exponential inter-arrival gaps at
+    `rate_rps` mean offered load."""
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
+def bursty_trace(rate_rps: float, n: int, rng: np.random.Generator,
+                 burst: int = POOL_SIZE) -> np.ndarray:
+    """Same mean offered load, arriving in bursts of `burst`
+    back-to-back requests separated by exponential gaps — the
+    flash-crowd shape admission windows are supposed to exploit."""
+    gaps = rng.exponential(burst / rate_rps,
+                           size=(n + burst - 1) // burst)
+    starts = np.cumsum(gaps)
+    t = np.repeat(starts, burst)[:n]
+    # 50us intra-burst spacing: near-simultaneous, not identical
+    return t + np.tile(np.arange(burst) * 50e-6,
+                       (len(starts),))[:n]
+
+
+TRACES: Dict[str, Callable] = {"poisson": poisson_trace,
+                               "bursty": bursty_trace}
+
+
+# ----------------------------------------------------------------------
+# open-loop driver
+# ----------------------------------------------------------------------
+def _drive(submit: Callable[[int], object], offsets: np.ndarray
+           ) -> List[tuple]:
+    """Replay the trace: sleep to each arrival offset, submit, tag the
+    future with its SCHEDULED arrival (open-loop accounting: if the
+    driver or server fell behind, the wait still counts against it)."""
+    t0 = time.perf_counter()
+    out = []
+    for i, off in enumerate(offsets):
+        delay = t0 + off - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        out.append((t0 + off, submit(i)))
+    return out
+
+
+def _collect(tagged: List[tuple], timeout: float = 600.0) -> dict:
+    """Wait for every future, return open-loop latencies + aggregate
+    completion rate (first arrival -> last completion)."""
+    lats, outs, t_first, t_last = [], [], None, None
+    for arrive_at, fut in tagged:
+        outs.append(fut.wait(timeout=timeout))
+        done_at = fut.done_at
+        lats.append(done_at - arrive_at)
+        t_first = arrive_at if t_first is None else min(t_first, arrive_at)
+        t_last = done_at if t_last is None else max(t_last, done_at)
+    lat_ms = np.asarray(lats) * 1e3
+    return dict(
+        outputs=outs,
+        p50_ms=round(float(np.percentile(lat_ms, 50)), 3),
+        p99_ms=round(float(np.percentile(lat_ms, 99)), 3),
+        calls_per_sec=round(len(tagged) / max(t_last - t_first, 1e-9), 1))
+
+
+# ----------------------------------------------------------------------
+# workload: shared-weight matmul graph
+# ----------------------------------------------------------------------
+def _build_matmul(spec, rng, m: int = 32, d: int = 64, layers: int = 2):
+    """Shared-constant-weight matmul chain with a host stage between
+    the layers (the decoder's accel/host/accel shape: think tokenize /
+    sample / feature transforms).  The host stage splits the program
+    into multiple segments — which is what makes greedy dispatch
+    desync-prone: slots parked at different segment offsets stay offset
+    forever and stop ganging, the failure mode the admission window
+    repairs."""
+    ep = Epilogue(shift=6, relu=True)
+    ws = [rng.integers(-128, 128, size=(d, d), dtype=np.int8)
+          for _ in range(layers)]
+
+    def hostfn(a):
+        return np.ascontiguousarray(a[::-1])    # cheap, deterministic
+
+    p = Program(spec)
+    t = p.input("x", (m, d))
+    for i, w in enumerate(ws):
+        t = p.matmul(t, p.constant(f"w{i}", w), epilogue=ep)
+        if i < len(ws) - 1:
+            t = p.host(hostfn, t, shape=(m, d), kind="mat")
+    compiled = p.compile(use_cache=False)
+
+    def ref(x):
+        r = x
+        for i, w in enumerate(ws):
+            r = matmul_reference(r, w, ep)
+            if i < len(ws) - 1:
+                r = hostfn(r)
+        return r
+    return compiled, ref, (m, d)
+
+
+def _warm_gang_widths(compiled, eng, feed: Dict[str, np.ndarray],
+                      sessions: bool = False) -> None:
+    """JIT-warm every gang width 1..POOL_SIZE deterministically: a
+    fixed-width scheduler releases exact gangs of each width (each
+    width is a distinct vmapped kernel shape — unwarmed widths would
+    charge their compile to whichever measured cell hits them first)."""
+    with DevicePool(compiled, size=POOL_SIZE, backend=eng) as pool:
+        for w in range(1, POOL_SIZE + 1):
+            s = Scheduler(pool, SchedConfig(
+                window_us=100000, gang_width=w, pipeline_depth=1))
+            if sessions:   # stateful warm: throwaway pool, state discarded
+                futs = [s.session(slot=i).submit(**feed)
+                        for i in range(w)]
+            else:
+                futs = [s.submit(**feed) for _ in range(w)]
+            [f.wait(timeout=600) for f in futs]
+            s.close()
+
+
+def run_matmul_traffic(n_requests: int = 48,
+                       loads: Optional[Dict[str, float]] = None,
+                       traces: tuple = ("poisson", "bursty"),
+                       window_us: float = 2000.0, reps: int = 3,
+                       seed: int = 20260808, quiet: bool = False) -> dict:
+    """Drive the shared-weight matmul graph open-loop.  `loads` maps a
+    label to an offered-load multiple of the pool's calibrated
+    aggregate capacity (None -> moderate 0.75x and high 1.5x); every
+    (trace, load) cell runs greedy AND windowed, best-of-`reps` on
+    calls/sec (cold-start noise suppression, same as the other
+    benchmarks), and byte-checks EVERY repetition against serial
+    execution."""
+    spec = hwspec.pynq()
+    rng = np.random.default_rng(seed)
+    compiled, ref, (m, d) = _build_matmul(spec, rng)
+    eng = PallasBackend()
+    probe = {"x": rng.integers(-128, 128, size=(m, d), dtype=np.int8)}
+    _warm_gang_widths(compiled, eng, probe)
+
+    # calibrate: serial per-call seconds on this machine (warm)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        compiled(backend=eng, **probe)
+    t_call = (time.perf_counter() - t0) / 5
+    slot_rps = 1.0 / max(t_call, 1e-9)
+    if loads is None:
+        loads = {"moderate": 0.75, "high": 1.5}
+
+    feeds = [rng.integers(-128, 128, size=(m, d), dtype=np.int8)
+             for _ in range(n_requests)]
+    refs = [ref(x) for x in feeds]
+
+    result = {"workload": f"matmul {m}x{d} chain, shared constant "
+                          f"weights + host mid-stage, pool {POOL_SIZE}",
+              "pool_size": POOL_SIZE,
+              "serial_slot_rps": round(slot_rps, 1),
+              "window_us": window_us, "n_requests": n_requests,
+              "reps_best_of": reps, "traces": {}}
+    trace_rng = np.random.default_rng(seed + 1)
+    for trace in traces:
+        for label, mult in loads.items():
+            rate = slot_rps * POOL_SIZE * mult
+            offsets = TRACES[trace](rate, n_requests,
+                                    np.random.default_rng(
+                                        trace_rng.integers(1 << 31)))
+            cell = {"offered_rps": round(rate, 1), "modes": {}}
+            for mode in ("greedy", "windowed"):
+                best = None
+                for _ in range(reps):
+                    with DevicePool(compiled, size=POOL_SIZE,
+                                    backend=eng) as pool:
+                        sched = None
+                        if mode == "windowed":
+                            sched = Scheduler(pool, SchedConfig(
+                                window_us=window_us, queue_cap=4096))
+                            submit = lambda i: sched.submit(x=feeds[i])
+                        else:
+                            submit = lambda i: pool.submit(x=feeds[i])
+                        tagged = _drive(submit, offsets)
+                        got = _collect(tagged)
+                        outs = got.pop("outputs")
+                        for o, r in zip(outs, refs):
+                            assert np.array_equal(o, r), \
+                                f"{mode}/{trace}/{label}: output " \
+                                "diverged from serial baseline — " \
+                                "refusing to publish"
+                        got["exact"] = True
+                        stats = pool.slot_stats()
+                        got["ganged_steps"] = sum(s.ganged_steps
+                                                  for s in stats)
+                        got["max_gang"] = max(s.max_gang for s in stats)
+                        if sched is not None:
+                            st = sched.stats()[0]
+                            got["releases"] = st.releases
+                            got["window_timeouts"] = st.window_timeouts
+                            got["gang_width"] = sched.gang_widths[0]
+                            sched.close()
+                        if best is None or got["calls_per_sec"] > \
+                                best["calls_per_sec"]:
+                            best = got
+                cell["modes"][mode] = best
+            g = cell["modes"]["greedy"]["calls_per_sec"]
+            w = cell["modes"]["windowed"]["calls_per_sec"]
+            cell["windowed_vs_greedy_x"] = round(w / max(g, 1e-9), 2)
+            result["traces"][f"{trace}@{label}"] = cell
+            if not quiet:
+                print(f"  {trace:>8}@{label:<9} "
+                      f"({cell['offered_rps']:>7} rps offered): "
+                      f"greedy {g:>7} c/s "
+                      f"p99 {cell['modes']['greedy']['p99_ms']:>8}ms | "
+                      f"windowed {w:>7} c/s "
+                      f"p99 {cell['modes']['windowed']['p99_ms']:>8}ms | "
+                      f"{cell['windowed_vs_greedy_x']}x")
+    return result
+
+
+# ----------------------------------------------------------------------
+# workload: persistent-KV decode sessions
+# ----------------------------------------------------------------------
+def run_decode_traffic(sessions: int = POOL_SIZE, steps: int = 8,
+                       loads: Optional[Dict[str, float]] = None,
+                       trace: str = "poisson",
+                       window_us: float = 3000.0, reps: int = 2,
+                       seed: int = 20260809, quiet: bool = False) -> dict:
+    """Token-arrival traffic for `sessions` concurrent decode sessions
+    (quantized decoder, persistent KV caches).  Arrivals round-robin the
+    sessions; a session's next token waits for its predecessor (state
+    order), but latency is charged from the scheduled arrival — the
+    open-loop convention.  Windowed mode routes submits through the
+    admission window so same-step tokens of different sessions release
+    (and gang) together."""
+    from repro.models.vta_decoder import QuantDecoder
+
+    dec = QuantDecoder()
+    if 2 + steps > dec.cfg.s_max:
+        raise ValueError(f"steps {steps} + warmup exceed KV capacity "
+                         f"{dec.cfg.s_max}")
+    compiled = dec.compile(use_cache=False)
+    eng = PallasBackend()
+    n = sessions * steps
+    rng = np.random.default_rng(seed)
+    toks = [rng.integers(-32, 32, (1, dec.cfg.d_model), np.int8)
+            for _ in range(n)]
+    _warm_gang_widths(compiled, eng, {"x": toks[0]}, sessions=True)
+
+    # calibrate one serial decode step (pool of 1, warm)
+    with DevicePool(compiled, size=1, backend=eng) as p1:
+        s = p1.session()
+        s.submit(x=toks[0]).wait(timeout=600)
+        t0 = time.perf_counter()
+        s.submit(x=toks[1]).wait(timeout=600)
+        t_step = time.perf_counter() - t0
+    step_rps = 1.0 / max(t_step, 1e-9)
+    if loads is None:
+        loads = {"moderate": 0.5, "overload": 1.5}
+
+    result = {"workload": f"quantized {dec.cfg.n_blocks}-block decoder, "
+                          f"{sessions} sessions x {steps} tokens, "
+                          f"pool {POOL_SIZE}",
+              "pool_size": POOL_SIZE, "window_us": window_us,
+              "serial_step_rps": round(step_rps, 1),
+              "reps_best_of": reps, "traces": {}}
+    for label, mult in loads.items():
+        rate = step_rps * POOL_SIZE * mult
+        offsets = TRACES[trace](rate, n, np.random.default_rng(seed + 2))
+        cell = {"offered_rps": round(rate, 1), "modes": {}}
+        for mode in ("greedy", "windowed"):
+            best = None
+            for _ in range(reps):
+                with DevicePool(compiled, size=POOL_SIZE,
+                                backend=eng) as pool:
+                    sched = None
+                    if mode == "windowed":
+                        sched = Scheduler(pool, SchedConfig(
+                            window_us=window_us, queue_cap=4096))
+                        sess = [sched.session(slot=i % POOL_SIZE)
+                                for i in range(sessions)]
+                    else:
+                        sess = [pool.session(slot=i % POOL_SIZE)
+                                for i in range(sessions)]
+                    refs = [dec.reference() for _ in range(sessions)]
+                    # warm this pool's sessions (tokens 0..sessions-1
+                    # are the warmup prefix of the reference streams)
+                    wf = [sess[i].submit(x=toks[i])
+                          for i in range(sessions)]
+                    for i, f in enumerate(wf):
+                        assert np.array_equal(f.wait(timeout=600),
+                                              refs[i].step(toks[i]))
+                    last: List[object] = list(wf)
+
+                    def submit(i, _sess=sess, _last=last):
+                        si = i % sessions
+                        if _last[si] is not None and not _last[si].done():
+                            _last[si].wait(timeout=600)   # state order
+                        f = _sess[si].submit(x=toks[sessions + i])
+                        _last[si] = f
+                        return f
+
+                    tagged = _drive(submit, offsets[:n - sessions])
+                    got = _collect(tagged)
+                    outs = got.pop("outputs")
+                    for i, o in enumerate(outs):
+                        r = refs[i % sessions].step(toks[sessions + i])
+                        assert np.array_equal(o, r), \
+                            f"{mode}/{label}: decode step {i} diverged " \
+                            "from the eager reference — refusing to " \
+                            "publish"
+                    got["exact"] = True
+                    stats = pool.slot_stats()
+                    got["ganged_steps"] = sum(s.ganged_steps
+                                              for s in stats)
+                    got["max_gang"] = max(s.max_gang for s in stats)
+                    if sched is not None:
+                        st = sched.stats()[0]
+                        got["releases"] = st.releases
+                        got["window_timeouts"] = st.window_timeouts
+                        sched.close()
+                    if best is None or got["calls_per_sec"] > \
+                            best["calls_per_sec"]:
+                        best = got
+            cell["modes"][mode] = best
+        g = cell["modes"]["greedy"]["calls_per_sec"]
+        w = cell["modes"]["windowed"]["calls_per_sec"]
+        cell["windowed_vs_greedy_x"] = round(w / max(g, 1e-9), 2)
+        result["traces"][f"{trace}@{label}"] = cell
+        if not quiet:
+            print(f"  decode {trace:>8}@{label:<9} "
+                  f"({cell['offered_rps']:>6} rps offered): "
+                  f"greedy {g:>6} t/s | windowed {w:>6} t/s | "
+                  f"{cell['windowed_vs_greedy_x']}x")
+    return result
+
+
+# ----------------------------------------------------------------------
+# entry points
+# ----------------------------------------------------------------------
+def run_traffic(out_json: Optional[str] = None, smoke: bool = False,
+                quiet: bool = False) -> dict:
+    """Full open-loop traffic benchmark: both workloads, >= 2 traces x
+    >= 2 offered loads, greedy vs windowed, everything byte-checked.
+    Writes ``benchmarks/BENCH_traffic.json`` (full mode only).
+
+    `smoke` shrinks to one tiny trace per workload and skips the JSON —
+    the CI mode: it proves exactness-through-the-scheduler and the
+    plumbing, not the performance claim."""
+    if not quiet:
+        print("open-loop traffic (greedy submit vs admission window):")
+    if smoke:
+        mat = run_matmul_traffic(n_requests=8, loads={"smoke": 1.0},
+                                 traces=("poisson",), reps=1,
+                                 quiet=quiet)
+        dec = run_decode_traffic(sessions=2, steps=2, reps=1,
+                                 loads={"smoke": 1.0}, quiet=quiet)
+        return {"smoke": True, "matmul": mat, "decode": dec}
+    result = {"pool_size": POOL_SIZE, "workloads": {}}
+    result["workloads"]["matmul-shared-weights"] = run_matmul_traffic(
+        quiet=quiet)
+    result["workloads"]["decode-sessions"] = run_decode_traffic(
+        quiet=quiet)
+    if out_json is None:
+        out_json = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_traffic.json")
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    if not quiet:
+        print(f"-> {out_json}")
+    return result
+
+
+if __name__ == "__main__":
+    run_traffic()

@@ -77,6 +77,15 @@ def main() -> None:
     summary.append(("conv_fast_path", (time.perf_counter() - t0) * 1e6,
                     f"x{conv_speedup:.1f} vs pre-PR eager path"))
 
+    _section("Traffic smoke: continuous batching, open-loop arrivals")
+    t0 = time.perf_counter()
+    from benchmarks import loadgen
+    trow = loadgen.run_traffic(smoke=True)
+    mcell = next(iter(trow["matmul"]["traces"].values()))
+    summary.append(("traffic_smoke", (time.perf_counter() - t0) * 1e6,
+                    f"exact={mcell['modes']['windowed']['exact']} "
+                    "(full: python -m benchmarks.loadgen)"))
+
     _section("Dry-run roofline table (from experiments/dryrun)")
     t0 = time.perf_counter()
     try:

@@ -2,14 +2,19 @@
 scheduler, program-level JIT) as a composable package."""
 from . import backend, compiler, conv, driver, hwspec, isa  # noqa: F401
 from . import layout, microop, pipeline_model, program  # noqa: F401
-from . import quantize, runtime, scheduler, serve, simulator  # noqa: F401
-from . import workloads  # noqa: F401
+from . import quantize, runtime, sched, scheduler, serve  # noqa: F401
+from . import simulator, workloads  # noqa: F401
 from .backend import (CrossBackendChecker, ExecutionBackend,  # noqa: F401
                       PallasBackend, SimulatorBackend, assert_fast_path,
-                      resolve_backend)
+                      decode_cache_info, resolve_backend,
+                      set_decode_cache_cap)
 from .conv import ConvShape, select_conv_lowering  # noqa: F401
 from .hwspec import HardwareSpec, pynq, pynq_batch2, tpu_like  # noqa: F401
-from .program import CompiledProgram, Program, TensorRef  # noqa: F401
+from .program import (CompiledProgram, Program, TensorRef,  # noqa: F401
+                      compile_multi)
 from .runtime import Runtime  # noqa: F401
+from .sched import (DeadlineExpired, QueueFull, SchedConfig,  # noqa: F401
+                    SchedFuture, Scheduler, Shed, auto_gang_width)
 from .scheduler import Epilogue, SramPartition  # noqa: F401
-from .serve import BatchServer, DevicePool, PoolFuture, serve_batch  # noqa: F401
+from .serve import (BatchServer, DevicePool, PoolFuture,  # noqa: F401
+                    SlotDied, serve_batch)

@@ -106,6 +106,38 @@ _OUT_EDGES = DEP_OUT_EDGES
 # _DECODE_LOCK (pop+reinsert is not atomic under concurrent eviction).
 _DECODE_CACHE: Dict[tuple, List[Insn]] = {}
 _DECODE_LOCK = threading.Lock()
+# LRU bound on the shared cache: generous by default (a long-lived
+# multi-program server holds a handful of streams per program), but
+# configurable so it can never grow without limit.  Evictions are
+# counted — cumulatively here, per run in RunStats.decode_evictions.
+_DECODE_CACHE_CAP = 256
+_DECODE_EVICTIONS = 0
+
+
+def set_decode_cache_cap(cap: int) -> int:
+    """Re-bound the process-wide decoded-stream LRU cache at `cap`
+    entries (0 disables retention entirely), trimming least-recently-hit
+    entries immediately if it is over the new bound.  Returns the number
+    of entries trimmed by this call."""
+    global _DECODE_CACHE_CAP, _DECODE_EVICTIONS
+    if cap < 0:
+        raise ValueError(f"decode cache cap must be >= 0, got {cap}")
+    trimmed = 0
+    with _DECODE_LOCK:
+        _DECODE_CACHE_CAP = cap
+        while len(_DECODE_CACHE) > cap:
+            _DECODE_CACHE.pop(next(iter(_DECODE_CACHE)))
+            trimmed += 1
+        _DECODE_EVICTIONS += trimmed
+    return trimmed
+
+
+def decode_cache_info() -> Dict[str, int]:
+    """Live size / bound / lifetime eviction count of the shared
+    decoded-stream cache (ops introspection)."""
+    with _DECODE_LOCK:
+        return {"size": len(_DECODE_CACHE), "cap": _DECODE_CACHE_CAP,
+                "evictions": _DECODE_EVICTIONS}
 
 
 @dataclass
@@ -222,7 +254,7 @@ class PallasBackend:
         raw = devices[0].dram.read(
             addr, stream.shape[0] * isa.insn_bytes,
             dtype=np.uint64, shape=(stream.shape[0], isa.insn_words))
-        insns = self._decode_cached(spec, isa, raw)
+        insns, evicted = self._decode_cached(spec, isa, raw)
         statss = self._run_gang(spec, devices, insns)
         wall = time.perf_counter() - t0
         rep = None
@@ -236,6 +268,7 @@ class PallasBackend:
             stats.backend = self.name
             stats.wall_time_s = wall
             stats.gang_size = len(devices)
+            stats.decode_evictions = evicted
             if rep is not None:
                 stats.total_cycles = rep.total_cycles
                 for nm, ms in rep.modules.items():
@@ -244,27 +277,34 @@ class PallasBackend:
         return statss
 
     def _decode_cached(self, spec: HardwareSpec, isa: IsaLayout,
-                       raw: np.ndarray) -> List[Insn]:
+                       raw: np.ndarray) -> Tuple[List[Insn], int]:
         """Decode the raw stream words, memoized by content digest: a
         serving loop re-running one pre-staged stream pays the (pure
         python) decode exactly once.  Keyed on the bytes actually read
-        from DRAM, so there is still no side channel."""
+        from DRAM, so there is still no side channel.  Returns
+        ``(insns, evicted)`` where `evicted` counts LRU entries this
+        call pushed out of the bounded cache (set_decode_cache_cap)."""
         import hashlib
+        global _DECODE_EVICTIONS
         if not self.cache_decode:
-            return isa.decode_stream(raw)
+            return isa.decode_stream(raw), 0
         key = (spec, hashlib.sha1(raw.tobytes()).hexdigest())
         with _DECODE_LOCK:
             hit = _DECODE_CACHE.pop(key, None)
             if hit is not None:
                 _DECODE_CACHE[key] = hit   # re-insert: LRU order by last hit
-                return hit
+                return hit, 0
         insns = isa.decode_stream(raw)
+        evicted = 0
         with _DECODE_LOCK:
-            if len(_DECODE_CACHE) >= 128:
+            while len(_DECODE_CACHE) >= max(1, _DECODE_CACHE_CAP):
                 # evict the least-recently-used entry; hot streams survive
                 _DECODE_CACHE.pop(next(iter(_DECODE_CACHE)))
-            _DECODE_CACHE[key] = insns
-        return insns
+                evicted += 1
+            if _DECODE_CACHE_CAP > 0:
+                _DECODE_CACHE[key] = insns
+            _DECODE_EVICTIONS += evicted
+        return insns, evicted
 
     # ------------------------------------------------------------------
     def _run_gang(self, spec: HardwareSpec, devices: Sequence[Device],

@@ -54,6 +54,26 @@ from .scheduler import SramPartition
 FENCE_MODES = ("buffer", "barrier")
 
 
+@dataclass(frozen=True)
+class ImageRange:
+    """The half-open DRAM span ``[lo, hi)`` one compiled program's staged
+    image occupies: buffers, constants, arena, persistent state and
+    pre-staged streams all land inside it.  Co-staged programs
+    (``program.compile_multi``) compile against ONE shared device whose
+    bump allocator hands each program a disjoint range — the property
+    that lets a single pool slot hold a heterogeneous program mix in one
+    resident image with every baked address still valid."""
+    lo: int
+    hi: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.hi - self.lo
+
+    def overlaps(self, other: "ImageRange") -> bool:
+        return self.lo < other.hi and other.lo < self.hi
+
+
 @dataclass
 class AccelStep:
     """One finalized accelerator segment: a single encoded task-ISA stream

@@ -58,7 +58,8 @@ import numpy as np
 
 from . import hwspec as _hwspec, layout
 from .backend import BackendLike, resolve_backend
-from .compiler import AccelStep, ArenaAllocator, CpuStep, SegmentBuilder
+from .compiler import (AccelStep, ArenaAllocator, CpuStep, ImageRange,
+                       SegmentBuilder)
 from .conv import (ConvShape, conv2d_reference, lower_conv1x1,
                    lower_conv2d, lower_conv_im2col, select_conv_lowering)
 from .hwspec import HardwareSpec
@@ -478,7 +479,8 @@ class Program:
                 tuple(self._outputs))
 
     def compile(self, use_cache: bool = True, fence_mode: str = "buffer",
-                prestage: bool = True) -> "CompiledProgram":
+                prestage: bool = True,
+                device: Any = None) -> "CompiledProgram":
         """Lower the graph into encoded stream segments.
 
         fence_mode: "buffer" (default) separates dependent ops with
@@ -488,26 +490,64 @@ class Program:
         join_barrier rendezvous as the A/B baseline.  prestage: stage the
         encoded streams into DRAM at compile time so repeat calls perform
         zero DRAM allocation (False re-stages per call — the pre-PR
-        behavior, kept for A/B benchmarking)."""
+        behavior, kept for A/B benchmarking).  device: stage into an
+        EXISTING device instead of a fresh one — the bump allocator
+        continues above whatever is already staged there, so several
+        programs co-stage at disjoint DRAM ranges in one image (see
+        :func:`compile_multi`).  Co-staged artifacts are device-bound
+        and therefore never enter the compile cache."""
         sig = self.signature()
-        key = None if sig is None else (sig, fence_mode, prestage)
+        key = None if sig is None or device is not None \
+            else (sig, fence_mode, prestage)
         if use_cache and key is not None and key in _COMPILE_CACHE:
             return _COMPILE_CACHE[key]
-        compiled = _build(self, fence_mode=fence_mode, prestage=prestage)
+        compiled = _build(self, fence_mode=fence_mode, prestage=prestage,
+                          device=device)
         if use_cache and key is not None:
             _COMPILE_CACHE[key] = compiled
         return compiled
+
+
+def compile_multi(progs: Sequence[Program], fence_mode: str = "buffer",
+                  prestage: bool = True) -> List["CompiledProgram"]:
+    """Co-stage several programs into ONE resident DRAM image.
+
+    Each program compiles against the same device, so the shared bump
+    allocator hands every program a disjoint :class:`ImageRange` —
+    constants, arena, persistent buffers and pre-staged streams of all
+    programs coexist with every baked address valid.  A ``DevicePool``
+    built from the returned list clones this one image per slot and
+    serves the heterogeneous program mix; the continuous-batching
+    scheduler (``core.sched``) gangs only same-program requests.
+
+    Co-staged artifacts are device-bound: they bypass the compile cache
+    and must not be mixed with independently compiled programs in one
+    pool."""
+    if not progs:
+        raise ValueError("compile_multi of zero programs")
+    out: List[CompiledProgram] = []
+    device = None
+    for p in progs:
+        c = _build(p, fence_mode=fence_mode, prestage=prestage,
+                   device=device)
+        device = c.device
+        out.append(c)
+    for a, b in zip(out, out[1:]):
+        assert not a.image_range.overlaps(b.image_range), \
+            "co-staged programs overlap in DRAM — allocator invariant broken"
+    return out
 
 
 # ----------------------------------------------------------------------
 # compilation: graph -> buffers + encoded stream segments
 # ----------------------------------------------------------------------
 def _build(prog: Program, fence_mode: str = "buffer",
-           prestage: bool = True) -> "CompiledProgram":
+           prestage: bool = True, device: Any = None) -> "CompiledProgram":
     global STREAM_BUILDS
     spec = prog.spec
     vt = prog.virtual_threads
-    rt = Runtime(spec)
+    rt = Runtime(spec, device=device)
+    image_lo = rt.device.dram._next
     addrs: Dict[int, int] = {}
 
     # resolve output set first: a never-consumed input has no layout
@@ -678,6 +718,8 @@ def _build(prog: Program, fence_mode: str = "buffer",
     return CompiledProgram(spec=spec, nodes=list(prog.nodes), addrs=addrs,
                            steps=steps, input_ids=input_ids,
                            output_ids=out_ids, device=rt.device,
+                           image_range=ImageRange(image_lo,
+                                                  rt.device.dram._next),
                            fence_mode=fence_mode, prestage=prestage,
                            const_names=const_names,
                            staged_bytes=staged_bytes,
@@ -737,6 +779,9 @@ class CompiledProgram:
     n_intermediates: int = 0
     persistent_ids: List[int] = field(default_factory=list)
     persistent_bytes: int = 0      # cross-call state at stable addresses
+    # DRAM span this program's staged image occupies; co-staged programs
+    # (compile_multi) get pairwise-disjoint ranges in one shared device
+    image_range: Optional[ImageRange] = None
     calls: int = 0
     last_staging_bytes: int = 0    # bytes staged by the most recent call
     last_stats: List[RunStats] = field(default_factory=list)
@@ -812,6 +857,12 @@ class CompiledProgram:
                 f"{self.nodes[i].name}@{self.addrs[i]:#x}"
                 for i in self.persistent_ids)
             tail += f" | persistent {self.persistent_bytes}B ({names})"
+        if (self.image_range is not None
+                and self.image_range.lo > self.device.dram.align):
+            # co-staged above another program's image: show the range so
+            # the multi-program layout is inspectable
+            tail += (f" | image [{self.image_range.lo:#x},"
+                     f"{self.image_range.hi:#x})")
         return chain + tail
 
     # ---- data movement -------------------------------------------------

@@ -8,23 +8,30 @@ arXiv 1802.04799) serves real traffic: a compiled program is staged once,
 cloned onto a pool of devices, and requests stream through an async
 submit()/wait() API.
 
-  * :class:`DevicePool` — N cloned, pre-staged devices per
-    CompiledProgram (``Device.clone(trim=True)`` of the staged image:
-    streams, constants and the recycled intermediate arena are already
-    in DRAM, and a slot can never allocate — the zero-per-call-DRAM
-    serving contract, now enforced per slot by construction).  Requests
-    are assigned to slot queues at submit time by a round-robin or
-    least-loaded policy.
+  * :class:`DevicePool` — N cloned, pre-staged devices serving one
+    CompiledProgram **or a co-staged program mix**
+    (``program.compile_multi``: every program occupies a disjoint
+    ``ImageRange`` of ONE resident image, so a single slot clone holds
+    the whole heterogeneous mix with every baked address valid).
+    ``Device.clone(trim=True)`` of the staged image means streams,
+    constants and the recycled intermediate arenas are already in DRAM,
+    and a slot can never allocate — the zero-per-call-DRAM serving
+    contract, enforced per slot by construction.  Requests are assigned
+    to slot queues at submit time by a round-robin or least-loaded
+    policy.
 
   * a **worker-scheduler** (one thread) that advances every in-flight
     request step by step: host segments are dispatched to a host
     executor thread FIRST, then the accelerator segments of the other
     requests run — so one request's host work overlaps another's
-    accelerator work — and requests sitting at the SAME accelerator
-    segment execute as one lockstep **gang**
+    accelerator work — and requests sitting at the SAME program's SAME
+    accelerator segment execute as one lockstep **gang**
     (:meth:`PallasBackend.execute_gang`): every kernel launch batches
     the peer tiles of all gang members, so aggregate calls/sec scales
-    with pool size instead of with the GIL.
+    with pool size instead of with the GIL.  Different programs never
+    gang (their streams differ); the continuous-batching admission
+    layer (``core.sched``) exists to park and release same-program
+    requests together so gangs actually form under open-loop traffic.
 
   * :class:`BatchServer` — shards a batch of requests across the pool
     and gathers results in submission order.
@@ -36,9 +43,16 @@ submit()/wait() API.
     sessions share a slot the scheduler swaps the resident state — raw
     DRAM reads/writes at the stable persistent addresses, never an
     allocation, so the trimmed-clone zero-alloc contract survives
-    arbitrary session interleavings.  The scheduler still gangs only
-    same-program same-step requests, so concurrent decode sessions at
-    the same step share kernel launches.
+    arbitrary session interleavings.  Residency is tracked per program:
+    sessions of co-staged programs live at disjoint addresses and never
+    evict each other.
+
+Failure is loud, never a hang: a worker exception or a dead slot fails
+the waiting future (the error carries the request id), the scheduler and
+host-worker threads are watchdogged against each other, and
+:meth:`DevicePool.kill_slot` is the chaos hook the regression suite uses
+to prove it — every request parked on or active in a killed slot raises
+:class:`SlotDied` immediately.
 
 The simulator engine has no gang mode; a pool over ``backend=
 "simulator"`` runs its slots serially and acts as the concurrency
@@ -50,8 +64,9 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -67,6 +82,13 @@ class PoolClosed(RuntimeError):
     pass
 
 
+class SlotDied(RuntimeError):
+    """A pool slot died (killed or crashed) with requests parked on or
+    active in it; every affected future raises this, carrying the
+    request id — never a silent hang."""
+    pass
+
+
 # ----------------------------------------------------------------------
 # futures
 # ----------------------------------------------------------------------
@@ -75,13 +97,16 @@ class PoolFuture:
     scheduler finishes the request (in any order relative to other
     futures — waits may be out of submission order) and returns the
     program outputs; request-local stats ride on the future, never on
-    shared CompiledProgram state."""
+    shared CompiledProgram state.  Errors propagate: a worker exception
+    or slot death raises here (annotated with the request id), it never
+    strands the waiter."""
 
     def __init__(self, slot_id: int, seq: int):
         self.slot_id = slot_id          # which pool slot serves it
         self.seq = seq                  # global submission order
         self.stats: List[RunStats] = []  # per accel segment, this request
         self.staging_bytes = 0
+        self.done_at: Optional[float] = None  # perf_counter at completion
         self._done = threading.Event()
         self._outputs: Any = None
         self._exc: Optional[BaseException] = None
@@ -101,14 +126,30 @@ class PoolFuture:
 
     result = wait
 
-    # scheduler side
-    def _finish(self, outputs: Any) -> None:
+    # scheduler side; first outcome wins — a request can be failed by
+    # kill_slot while its last gang is still retiring, and the late
+    # result must not overwrite the death notice (or vice versa)
+    def _finish(self, outputs: Any) -> bool:
+        if self._done.is_set():
+            return False
         self._outputs = outputs
+        self.done_at = time.perf_counter()
         self._done.set()
+        return True
 
-    def _fail(self, exc: BaseException) -> None:
+    def _fail(self, exc: BaseException) -> bool:
+        if self._done.is_set():
+            return False
+        if hasattr(exc, "add_note"):             # 3.11+: carry the id
+            try:
+                exc.add_note(f"[pool request #{self.seq} on slot "
+                             f"{self.slot_id}]")
+            except TypeError:                    # pragma: no cover
+                pass
         self._exc = exc
+        self.done_at = time.perf_counter()
         self._done.set()
+        return True
 
 
 @dataclass
@@ -121,6 +162,8 @@ class SlotStats:
     accel_steps: int = 0
     cpu_steps: int = 0
     ganged_steps: int = 0           # accel steps executed in a gang > 1
+    max_gang: int = 0               # widest gang this slot took part in
+    queue_hiwater: int = 0          # deepest the slot's submit queue got
     tiles_resolved: int = 0
     tile_batches: int = 0
     # persistent-state serving: resident-session swaps performed on this
@@ -137,9 +180,12 @@ class _Slot:
     stats: SlotStats = field(default_factory=SlotStats)
     queue: List["_Request"] = field(default_factory=list)
     active: Optional["_Request"] = None
-    # sid of the session whose persistent state is materialized in this
-    # slot's DRAM (None: virgin init state / slot-resident mode)
-    resident: Optional[int] = None
+    dead: bool = False
+    # per-program residency: prog key -> sid of the session whose
+    # persistent state is materialized in this slot's DRAM (absent:
+    # virgin init state / slot-resident mode).  Co-staged programs have
+    # disjoint persistent addresses, so their residents never collide.
+    resident: Dict[int, int] = field(default_factory=dict)
 
     @property
     def load(self) -> int:
@@ -148,10 +194,12 @@ class _Slot:
 
 @dataclass
 class _SessionState:
-    """Pool-internal record of one session: its sticky slot and, when
-    NOT resident there, the swapped-out raw persistent image."""
+    """Pool-internal record of one session: its program, sticky slot
+    and, when NOT resident there, the swapped-out raw persistent
+    image."""
     sid: int
     slot_id: int
+    prog: CompiledProgram
     image: Optional[Dict[str, np.ndarray]] = None
     calls: int = 0
 
@@ -160,8 +208,10 @@ class _SessionState:
 class _Request:
     future: PoolFuture
     inputs: Dict[str, np.ndarray]
+    prog: CompiledProgram
     step_idx: int = -1              # -1: inputs not yet staged
     session: Optional[_SessionState] = None
+    retired: bool = False           # future resolved + inflight released
 
 
 class Session:
@@ -193,7 +243,8 @@ class Session:
         return self._state.calls
 
     def submit(self, **inputs: np.ndarray) -> PoolFuture:
-        return self.pool._enqueue(inputs, session=self._state)
+        return self.pool._enqueue(inputs, session=self._state,
+                                  prog=self._state.prog)
 
     def state(self, name: str) -> np.ndarray:
         """Logical value of one persistent buffer as this session sees it
@@ -211,13 +262,18 @@ class Session:
 # the pool
 # ----------------------------------------------------------------------
 class DevicePool:
-    """N cloned pre-staged devices serving one CompiledProgram through an
-    async submit()/wait() API.
+    """N cloned pre-staged devices serving one CompiledProgram — or a
+    co-staged mix of them — through an async submit()/wait() API.
 
     Parameters
     ----------
     compiled: the staged artifact (``prestage=True`` recommended —
-        trimmed slot clones cannot allocate DRAM).
+        trimmed slot clones cannot allocate DRAM), or a SEQUENCE of
+        artifacts produced by ``program.compile_multi``: they share one
+        device image at disjoint DRAM ranges, and the pool serves the
+        whole mix.  ``submit()`` targets the first program;
+        ``submit_to(program, ...)`` targets any of them.  Only
+        same-program same-segment requests gang.
     size: number of device slots.
     backend: engine every request runs on ("pallas" gangs lockstep
         requests; "simulator" is the serial oracle).  One engine
@@ -228,12 +284,14 @@ class DevicePool:
         requests (ties to the lowest slot id).
     trim: clone only the allocated DRAM image per slot (MemoryError on
         any per-call allocation instead of silent growth).  Defaults to
-        ``compiled.prestage`` — a restaging (prestage=False) program
-        legitimately allocates its stream every call and needs the full
-        address space.
+        every program being prestaged — a restaging (prestage=False)
+        program legitimately allocates its stream every call and needs
+        the full address space.
     """
 
-    def __init__(self, compiled: CompiledProgram, size: int = 2,
+    def __init__(self, compiled: Union[CompiledProgram,
+                                       Sequence[CompiledProgram]],
+                 size: int = 2,
                  backend: BackendLike = "pallas",
                  policy: str = "round_robin", timing: Any = None,
                  trim: Optional[bool] = None):
@@ -241,13 +299,26 @@ class DevicePool:
             raise ValueError(f"pool size must be >= 1, got {size}")
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        progs = (list(compiled)
+                 if isinstance(compiled, (list, tuple)) else [compiled])
+        if not progs:
+            raise ValueError("DevicePool of zero programs")
+        dev = progs[0].device
+        for c in progs[1:]:
+            if c.device is not dev:
+                raise ValueError(
+                    "multi-program pools require co-staged programs "
+                    "(program.compile_multi) — these were compiled onto "
+                    "different devices, their DRAM images cannot merge")
         if trim is None:
-            trim = compiled.prestage
-        self.compiled = compiled
+            trim = all(c.prestage for c in progs)
+        self.programs: List[CompiledProgram] = progs
+        self.compiled = progs[0]            # default-submit target
+        self._prog_key = {id(c): i for i, c in enumerate(progs)}
         self.engine = resolve_backend(backend)
         self.policy = policy
         self.timing = timing
-        self.slots = [_Slot(id=i, device=compiled.device.clone(trim=trim))
+        self.slots = [_Slot(id=i, device=dev.clone(trim=trim))
                       for i in range(size)]
         self._rr = itertools.cycle(range(size))
         self._seq = itertools.count()
@@ -282,47 +353,132 @@ class DevicePool:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def _resolve_prog(self, program: Union[None, int, CompiledProgram]
+                      ) -> CompiledProgram:
+        if program is None:
+            return self.compiled
+        if isinstance(program, int):
+            return self.programs[program]
+        if id(program) not in self._prog_key:
+            raise ValueError("program was not staged on this pool "
+                             "(co-stage it with program.compile_multi)")
+        return program
+
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
     def submit(self, **inputs: np.ndarray) -> PoolFuture:
-        """Enqueue one request; returns immediately with a future.
-        Thread-safe: any thread may submit, waits may happen in any
-        order.  Input arrays are validated here (fail fast, in the
-        caller) and staged into the slot's DRAM by the scheduler.  For a
-        program with persistent state, sessionless submits run in
-        slot-resident mode (each slot IS one implicit session); use
-        :meth:`session` for explicit, swappable sessions."""
-        return self._enqueue(inputs, session=None)
+        """Enqueue one request against the pool's first (default)
+        program; returns immediately with a future.  Thread-safe: any
+        thread may submit, waits may happen in any order.  Input arrays
+        are validated here (fail fast, in the caller) and staged into
+        the slot's DRAM by the scheduler.  For a program with persistent
+        state, sessionless submits run in slot-resident mode (each slot
+        IS one implicit session); use :meth:`session` for explicit,
+        swappable sessions."""
+        return self._enqueue(inputs, session=None, prog=self.compiled)
+
+    def submit_to(self, program: Union[int, CompiledProgram],
+                  **inputs: np.ndarray) -> PoolFuture:
+        """Enqueue one request against a specific co-staged program
+        (index into ``self.programs`` or the artifact itself)."""
+        return self._enqueue(inputs, session=None,
+                             prog=self._resolve_prog(program))
+
+    def _pick_slot(self, session: Optional[_SessionState],
+                   avoid: frozenset = frozenset()) -> _Slot:
+        """Pick the serving slot (lock held).  Dead slots are skipped;
+        a session stays pinned and raises if its slot died.  `avoid`
+        lists slots already claimed by the same atomic batch — prefer
+        spreading a batch over distinct slots (so it can gang), falling
+        back to doubling up only when the batch outsizes the pool."""
+        if session is not None:
+            slot = self.slots[session.slot_id]   # sticky: state lives
+            if slot.dead:                        # (or swaps) there
+                raise SlotDied(f"session {session.sid}'s slot "
+                               f"{slot.id} died")
+            return slot
+        alive = [s for s in self.slots if not s.dead]
+        if not alive:
+            raise PoolClosed("every pool slot is dead")
+        if self.policy == "round_robin":
+            for prefer_fresh in (True, False):
+                for _ in range(len(self.slots)):
+                    slot = self.slots[next(self._rr)]
+                    if slot.dead:
+                        continue
+                    if prefer_fresh and slot.id in avoid:
+                        continue
+                    return slot
+            raise PoolClosed("every pool slot is dead")  # pragma: no cover
+        fresh = [s for s in alive if s.id not in avoid] or alive
+        return min(fresh, key=lambda s: (s.load, s.id))
 
     def _enqueue(self, inputs: Dict[str, np.ndarray],
-                 session: Optional[_SessionState]) -> PoolFuture:
-        self.compiled.check_inputs(inputs)
+                 session: Optional[_SessionState],
+                 prog: CompiledProgram) -> PoolFuture:
+        return self._enqueue_batch([(inputs, session, prog)])[0]
+
+    def submit_batch(self, program: Union[None, int, CompiledProgram],
+                     requests: Sequence[Dict[str, np.ndarray]]
+                     ) -> List[PoolFuture]:
+        """Enqueue several requests of one program ATOMICALLY: the
+        scheduler observes all of them at the same admission point, so
+        on an idle pool they land on distinct slots in the same round
+        and stay lockstep (a gang) for the whole program.  Sequential
+        ``submit()`` calls race the scheduler's round loop and can
+        stagger — this is the release primitive the admission window
+        (``core.sched``) is built on."""
+        prog = self._resolve_prog(program)
+        return self._enqueue_batch([(dict(r), None, prog)
+                                    for r in requests])
+
+    def _enqueue_batch(self, items: Sequence[Tuple[Dict[str, np.ndarray],
+                                                   Optional[_SessionState],
+                                                   CompiledProgram]]
+                       ) -> List[PoolFuture]:
+        for inputs, _, prog in items:
+            prog.check_inputs(inputs)
+        futs: List[PoolFuture] = []
         with self._lock:
             if self._closed:
                 raise PoolClosed("submit() on a closed DevicePool")
-            if session is not None:
-                slot = self.slots[session.slot_id]   # sticky: state lives
-            elif self.policy == "round_robin":       # (or swaps) there
-                slot = self.slots[next(self._rr)]
-            else:
-                slot = min(self.slots, key=lambda s: (s.load, s.id))
-            fut = PoolFuture(slot_id=slot.id, seq=next(self._seq))
-            slot.queue.append(_Request(future=fut, inputs=dict(inputs),
-                                       session=session))
-            self._inflight += 1
+            # validate before enqueuing anything: a mid-batch failure
+            # must not leave a half-admitted gang behind
+            for _, session, _ in items:
+                if session is not None and \
+                        self.slots[session.slot_id].dead:
+                    raise SlotDied(f"session {session.sid}'s slot "
+                                   f"{session.slot_id} died")
+            if all(s.dead for s in self.slots):
+                raise PoolClosed("every pool slot is dead")
+            used: set = set()
+            for inputs, session, prog in items:
+                slot = self._pick_slot(session, avoid=frozenset(used))
+                used.add(slot.id)
+                fut = PoolFuture(slot_id=slot.id, seq=next(self._seq))
+                slot.queue.append(_Request(future=fut,
+                                           inputs=dict(inputs),
+                                           prog=prog, session=session))
+                slot.stats.queue_hiwater = max(slot.stats.queue_hiwater,
+                                               len(slot.queue))
+                self._inflight += 1
+                futs.append(fut)
             self._wake.notify_all()
-        return fut
+        return futs
 
     # ------------------------------------------------------------------
     # sessions (persistent-state serving)
     # ------------------------------------------------------------------
-    def session(self, slot: Optional[int] = None) -> Session:
-        """Open a new session: an independent copy of the program's
+    def session(self, slot: Optional[int] = None,
+                program: Union[None, int, CompiledProgram] = None
+                ) -> Session:
+        """Open a new session: an independent copy of one program's
         persistent state, pinned to one slot (round-robin by default).
         Same-slot sessions are swapped in and out of the slot's DRAM by
         the scheduler; same-step submits of different sessions still
         gang across slots."""
+        prog = self._resolve_prog(program)
         with self._lock:
             if self._closed:
                 raise PoolClosed("session() on a closed DevicePool")
@@ -330,7 +486,9 @@ class DevicePool:
             slot_id = slot if slot is not None else next(self._session_rr)
             if not 0 <= slot_id < len(self.slots):
                 raise ValueError(f"slot {slot_id} out of range")
-            st = _SessionState(sid=sid, slot_id=slot_id)
+            if self.slots[slot_id].dead:
+                raise SlotDied(f"slot {slot_id} is dead")
+            st = _SessionState(sid=sid, slot_id=slot_id, prog=prog)
             self._sessions[sid] = st
         return Session(self, st)
 
@@ -338,50 +496,55 @@ class DevicePool:
         """Make `req`'s session state resident in `slot` before the
         request stages.  Swaps are raw DRAM reads/writes at the stable
         persistent addresses — NEVER an allocation, so trimmed clones
-        stay within the zero-alloc contract.  Scheduler-thread only."""
-        compiled = self.compiled
+        stay within the zero-alloc contract.  Residency is per program
+        (disjoint address ranges under compile_multi).  Scheduler-thread
+        only."""
         sess = req.session
-        if sess is None or not compiled.persistent_ids:
+        if sess is None or not sess.prog.persistent_ids:
             return
-        if slot.resident == sess.sid:
+        key = self._prog_key[id(sess.prog)]
+        if slot.resident.get(key) == sess.sid:
             return
-        if slot.resident is not None:
-            old = self._sessions.get(slot.resident)
+        old_sid = slot.resident.get(key)
+        if old_sid is not None:
+            old = self._sessions.get(old_sid)
             if old is not None:
-                old.image = compiled.persistent_image(device=slot.device)
+                old.image = old.prog.persistent_image(device=slot.device)
         if sess.image is not None:
-            compiled.load_persistent_image(sess.image, device=slot.device)
+            sess.prog.load_persistent_image(sess.image, device=slot.device)
             sess.image = None                      # resident now
         else:
-            compiled.reset_persistent(device=slot.device)
-        slot.resident = sess.sid
+            sess.prog.reset_persistent(device=slot.device)
+        slot.resident[key] = sess.sid
         slot.stats.session_swaps += 1
-        held = compiled.persistent_bytes + sum(
+        held = sess.prog.persistent_bytes + sum(
             sum(a.nbytes for a in s.image.values())
             for s in self._sessions.values()
             if s.slot_id == slot.id and s.image is not None)
         slot.stats.persist_hiwater = max(slot.stats.persist_hiwater, held)
 
     def _session_state(self, st: _SessionState, name: str) -> np.ndarray:
-        compiled = self.compiled
+        prog = st.prog
+        key = self._prog_key[id(prog)]
         with self._lock:
             slot = self.slots[st.slot_id]
-            if slot.resident == st.sid:
-                return compiled.read_persistent(name, device=slot.device)
-            nid = compiled.input_ids[name]
-            node = compiled.nodes[nid]
+            if slot.resident.get(key) == st.sid:
+                return prog.read_persistent(name, device=slot.device)
+            nid = prog.input_ids[name]
+            node = prog.nodes[nid]
             if st.image is None:                   # never ran
                 return np.array(node.const)
             raw = st.image[name]
             blocked = raw.view(node.meta.np_dtype()).reshape(
-                node.meta.blocked_shape(compiled.spec))
-            return node.meta.unpack(blocked, compiled.spec)
+                node.meta.blocked_shape(prog.spec))
+            return node.meta.unpack(blocked, prog.spec)
 
     def _session_reset(self, st: _SessionState) -> None:
+        key = self._prog_key[id(st.prog)]
         with self._lock:
             slot = self.slots[st.slot_id]
-            if slot.resident == st.sid:
-                self.compiled.reset_persistent(device=slot.device)
+            if slot.resident.get(key) == st.sid:
+                st.prog.reset_persistent(device=slot.device)
             else:
                 st.image = None
             st.calls = 0
@@ -392,6 +555,37 @@ class DevicePool:
             if not self._idle.wait_for(lambda: self._inflight == 0,
                                        timeout=timeout):
                 raise TimeoutError("DevicePool.drain timed out")
+
+    def kill_slot(self, slot_id: int) -> int:
+        """Chaos/ops hook: declare one slot dead NOW.  Every request
+        parked on or active in it fails immediately with
+        :class:`SlotDied` (the error names the request), the slot leaves
+        the submit rotation, and the scheduler discards any in-flight
+        result it may still produce.  Returns the number of requests
+        failed.  The regression suite kills a slot mid-flight to prove
+        waits raise instead of hanging."""
+        with self._lock:
+            slot = self.slots[slot_id]
+            if slot.dead:
+                return 0
+            slot.dead = True
+            victims = list(slot.queue)
+            slot.queue.clear()
+            if slot.active is not None and not slot.active.retired:
+                victims.append(slot.active)
+            n = 0
+            for req in victims:
+                if req.retired:
+                    continue
+                req.retired = True
+                self._inflight -= 1
+                n += 1
+                req.future._fail(SlotDied(
+                    f"request #{req.future.seq} lost: slot {slot_id} "
+                    f"died mid-flight"))
+            self._idle.notify_all()
+            self._wake.notify_all()
+        return n
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Reject new submits, let in-flight requests finish, stop the
@@ -429,58 +623,86 @@ class DevicePool:
         round's CpuStep batch, then runs the accelerator gangs while the
         host fns execute here — one request's host work overlaps other
         requests' accelerator work (the GIL drops inside the gangs' XLA
-        kernels)."""
-        compiled = self.compiled
+        kernels).  ``done.set()`` is unconditional: a raising host fn
+        must never leave the scheduler waiting on the round."""
         while True:
             item = self._host_q.get()
             if item is None:
                 return
-            host_slots, host_errs, done = item
-            for slot in host_slots:
-                step = compiled.steps[slot.active.step_idx]
-                try:
-                    compiled.exec_step(step, slot.device, self.engine,
-                                       timing=self.timing)
-                    slot.stats.cpu_steps += 1
-                except BaseException as e:
-                    host_errs[slot.id] = e
-            done.set()
+            jobs, host_errs, done = item
+            try:
+                for slot, req in jobs:
+                    if req.retired:               # killed mid-round
+                        continue
+                    step = req.prog.steps[req.step_idx]
+                    try:
+                        req.prog.exec_step(step, slot.device, self.engine,
+                                           timing=self.timing)
+                        slot.stats.cpu_steps += 1
+                    except BaseException as e:
+                        host_errs[slot.id] = e
+            finally:
+                done.set()
 
     def _run_scheduler(self) -> None:
-        compiled = self.compiled
-        steps = compiled.steps
+        try:
+            self._scheduler_loop()
+        except BaseException as e:
+            # nothing may escape the loop silently: a dead scheduler
+            # thread would strand every current AND future waiter, so
+            # fail everything in flight loudly before the thread exits
+            with self._lock:
+                for slot in self.slots:
+                    victims = list(slot.queue)
+                    slot.queue.clear()
+                    if slot.active is not None:
+                        victims.append(slot.active)
+                        slot.active = None
+                    for req in victims:
+                        if req.retired:
+                            continue
+                        req.retired = True
+                        self._inflight -= 1
+                        req.future._fail(PoolClosed(
+                            f"request #{req.future.seq} lost: pool "
+                            f"scheduler died: {e!r}"))
+                self._idle.notify_all()
+            raise
+
+    def _scheduler_loop(self) -> None:
         while True:
             with self._lock:
                 self._wake.wait_for(
                     lambda: self._closed or self._inflight > 0)
                 if self._closed and self._inflight == 0:
                     return
-                # admit queued requests to their slots
+                # admit queued requests to their slots (dead slots are
+                # drained by kill_slot, never admitted)
                 for slot in self.slots:
+                    if slot.dead:
+                        continue
                     if slot.active is None and slot.queue:
                         slot.active = slot.queue.pop(0)
-                active = [s for s in self.slots if s.active is not None]
+                active = [s for s in self.slots
+                          if s.active is not None and not s.dead]
                 if not active:
-                    # closed with queued-but-unadmittable? impossible —
-                    # admission above always fills an empty slot
+                    if self._inflight > 0 and not any(
+                            s.active or s.queue for s in self.slots):
+                        # inflight counter leaked (should be impossible)
+                        self._inflight = 0
+                        self._idle.notify_all()
                     continue
             try:
-                self._advance(active, steps)
+                self._advance(active)
             except BaseException as e:          # defensive: fail loudly
-                with self._lock:
-                    for slot in active:
-                        if slot.active is not None:
-                            slot.active.future._fail(e)
-                            slot.active = None
-                            self._inflight -= 1
-                    self._idle.notify_all()
+                for slot in active:
+                    if slot.active is not None:
+                        self._retire(slot, error=e)
 
-    def _advance(self, active: List[_Slot], steps: List[Any]) -> None:
+    def _advance(self, active: List[_Slot]) -> None:
         """One scheduler round: stage fresh requests, overlap host
-        segments with accelerator segments, gang same-segment requests,
-        then retire finished ones."""
-        compiled = self.compiled
-
+        segments with accelerator segments, gang same-program
+        same-segment requests, then retire finished ones."""
         # stage inputs of freshly admitted requests (swapping the slot's
         # resident session state first when the request belongs to a
         # different session than the last one served here)
@@ -489,7 +711,7 @@ class DevicePool:
             if req.step_idx < 0:
                 try:
                     self._ensure_resident(slot, req)
-                    req.future.staging_bytes = compiled.stage_inputs(
+                    req.future.staging_bytes = req.prog.stage_inputs(
                         req.inputs, device=slot.device)
                     slot.stats.staging_bytes += req.future.staging_bytes
                     req.inputs = {}
@@ -501,30 +723,39 @@ class DevicePool:
         # split this round's work: host segments first (dispatched to a
         # worker thread so they overlap the accel gangs below — the GIL
         # drops while the gang's kernels run inside XLA)
+        def step_of(s: _Slot):
+            req = s.active
+            if req is None or req.retired or \
+                    req.step_idx >= len(req.prog.steps):
+                return None
+            return req.prog.steps[req.step_idx]
+
         host_slots = [s for s in active
-                      if s.active is not None
-                      and s.active.step_idx < len(steps)
-                      and isinstance(steps[s.active.step_idx], CpuStep)]
+                      if isinstance(step_of(s), CpuStep)]
         accel_slots = [s for s in active
-                       if s.active is not None
-                       and s.active.step_idx < len(steps)
-                       and isinstance(steps[s.active.step_idx], AccelStep)]
+                       if isinstance(step_of(s), AccelStep)]
 
         host_errs: Dict[int, BaseException] = {}
         host_done: Optional[threading.Event] = None
         if host_slots:
             host_done = threading.Event()
-            self._host_q.put((host_slots, host_errs, host_done))
+            self._host_q.put(([(s, s.active) for s in host_slots],
+                              host_errs, host_done))
 
-        # accelerator segments: group same-step requests into gangs
+        # accelerator segments: group SAME-PROGRAM same-step requests
+        # into gangs (the streams must be identical for lockstep
+        # execution; different programs never gang)
         accel_errs: Dict[int, BaseException] = {}
         try:
-            by_step: Dict[int, List[_Slot]] = {}
+            by_key: Dict[Tuple[int, int], List[_Slot]] = {}
             for slot in accel_slots:
-                by_step.setdefault(slot.active.step_idx, []).append(slot)
-            for idx, group in by_step.items():
+                key = (self._prog_key[id(slot.active.prog)],
+                       slot.active.step_idx)
+                by_key.setdefault(key, []).append(slot)
+            for (_, idx), group in by_key.items():
+                prog = group[0].active.prog
                 try:
-                    self._exec_accel(steps[idx], group)
+                    self._exec_accel(prog, prog.steps[idx], group)
                 except BaseException as e:
                     # fail ONLY the gang that raised; other requests in
                     # this round proceed untouched
@@ -532,29 +763,41 @@ class DevicePool:
                         accel_errs[slot.id] = e
         finally:
             if host_done is not None:
-                host_done.wait()
+                # watchdog: a dead host worker must fail the round's
+                # host requests, not deadlock the whole pool
+                while not host_done.wait(1.0):
+                    if not self._host_thread.is_alive():
+                        dead = PoolClosed(
+                            "pool host worker died mid-round")
+                        for slot in host_slots:
+                            host_errs.setdefault(slot.id, dead)
+                        break
 
         # advance + retire
         for slot in list(active):
-            if slot.active is None:
+            req = slot.active
+            if req is None:
+                continue
+            if req.retired:                      # killed mid-round
+                slot.active = None
                 continue
             err = host_errs.get(slot.id) or accel_errs.get(slot.id)
             if err is not None:
                 self._retire(slot, error=err)
                 continue
-            slot.active.step_idx += 1
-            if slot.active.step_idx >= len(steps):
+            req.step_idx += 1
+            if req.step_idx >= len(req.prog.steps):
                 self._retire(slot)
 
-    def _exec_accel(self, step: AccelStep, group: List[_Slot]) -> None:
+    def _exec_accel(self, prog: CompiledProgram, step: AccelStep,
+                    group: List[_Slot]) -> None:
         """Run one accelerator segment for every slot in `group` — as a
         lockstep gang when the engine supports it (identical pre-staged
         stream on every slot), serially otherwise."""
-        compiled = self.compiled
         gang = getattr(self.engine, "execute_gang", None)
-        prestaged = compiled.prestage and step.staged_addr >= 0
+        prestaged = prog.prestage and step.staged_addr >= 0
         if gang is not None and len(group) > 1 and prestaged:
-            statss = gang(compiled.spec, [s.device for s in group],
+            statss = gang(prog.spec, [s.device for s in group],
                           step.stream, timing=self.timing,
                           staged_addr=step.staged_addr)
             for slot, stats in zip(group, statss):
@@ -565,28 +808,34 @@ class DevicePool:
                 slot.active.future.stats.append(stats)
                 slot.stats.accel_steps += 1
                 slot.stats.ganged_steps += 1
+                slot.stats.max_gang = max(slot.stats.max_gang, len(group))
                 slot.stats.tiles_resolved += stats.tiles_resolved
                 slot.stats.tile_batches += stats.tile_batches
             return
         for slot in group:
-            stats = compiled.exec_step(step, slot.device, self.engine,
-                                       timing=self.timing)
+            stats = prog.exec_step(step, slot.device, self.engine,
+                                   timing=self.timing)
             stats.staging_bytes_per_call = slot.active.future.staging_bytes
             slot.active.future.stats.append(stats)
             slot.stats.accel_steps += 1
+            slot.stats.max_gang = max(slot.stats.max_gang, 1)
             slot.stats.tiles_resolved += stats.tiles_resolved
             slot.stats.tile_batches += stats.tile_batches
 
     def _retire(self, slot: _Slot, error: Optional[BaseException] = None
                 ) -> None:
         req = slot.active
-        slot.active = None
+        with self._lock:
+            slot.active = None
+            if req is None or req.retired:
+                return                          # killed while executing
+            req.retired = True
         if error is not None:
             req.future._fail(error)
         else:
             try:
                 req.future._finish(
-                    self.compiled.read_outputs(device=slot.device))
+                    req.prog.read_outputs(device=slot.device))
                 slot.stats.calls += 1
                 if req.session is not None:
                     req.session.calls += 1
@@ -603,23 +852,29 @@ class DevicePool:
         return [s.stats for s in self.slots]
 
     def describe(self) -> str:
-        """``CompiledProgram.describe()`` (per-device invariants hold per
-        slot) plus one serving line per slot."""
-        lines = [self.compiled.describe(),
-                 f"pool[{len(self.slots)} slots, {self.engine.name}, "
-                 f"{self.policy}]"]
-        stateful = bool(self.compiled.persistent_ids)
+        """``CompiledProgram.describe()`` of every staged program
+        (per-device invariants hold per slot) plus one serving line per
+        slot, including live queue depth."""
+        lines = [c.describe() for c in self.programs]
+        lines.append(f"pool[{len(self.slots)} slots, {self.engine.name}, "
+                     f"{self.policy}, {len(self.programs)} program(s)]")
+        stateful = any(c.persistent_ids for c in self.programs)
         for s in self.slots:
             st = s.stats
             line = (
                 f"  slot{s.id}: {st.calls} calls, {st.staging_bytes}B "
                 f"staged, {st.accel_steps} accel steps "
-                f"({st.ganged_steps} ganged), {st.cpu_steps} host steps, "
-                f"{st.tiles_resolved} tiles / {st.tile_batches} launches")
+                f"({st.ganged_steps} ganged, max gang {st.max_gang}), "
+                f"{st.cpu_steps} host steps, "
+                f"{st.tiles_resolved} tiles / {st.tile_batches} launches, "
+                f"q{len(s.queue)} (hiwater {st.queue_hiwater})")
+            if s.dead:
+                line += " [DEAD]"
             if stateful:
                 nsess = sum(1 for x in self._sessions.values()
                             if x.slot_id == s.id)
-                res = "-" if s.resident is None else f"sid{s.resident}"
+                res = ",".join(f"sid{sid}" for sid in s.resident.values()) \
+                    or "-"
                 line += (f", {nsess} sessions ({res} resident, "
                          f"{st.session_swaps} swaps, "
                          f"{st.persist_hiwater}B hiwater)")

@@ -128,6 +128,11 @@ class RunStats:
     # lockstep (PallasBackend.execute_gang) — wall_time_s is then the
     # shared gang window, not a per-device slice
     gang_size: int = 1
+    # entries evicted from the bounded decoded-stream LRU cache while
+    # decoding this run's stream (backend.set_decode_cache_cap); nonzero
+    # means a long-lived multi-program server is cycling more distinct
+    # streams than the cache holds
+    decode_evictions: int = 0
 
     @property
     def eager_compute_insns(self) -> int:
@@ -149,7 +154,8 @@ class RunStats:
                       "coalesced_alu_insns", "eager_gemm_insns",
                       "eager_alu_insns", "n_join_barriers",
                       "n_buffer_fences", "staging_bytes_per_call",
-                      "tiles_resolved", "tile_batches"):
+                      "tiles_resolved", "tile_batches",
+                      "decode_evictions"):
                 setattr(out, f, getattr(out, f) + getattr(r, f))
             out.gang_size = max(out.gang_size, r.gang_size)
             for nm, ms in r.modules.items():

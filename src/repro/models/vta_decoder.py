@@ -205,8 +205,12 @@ class QuantDecoder:
         p.output(logits)
         return p
 
-    def compile(self, **kw) -> CompiledProgram:
-        return self.build_program().compile(**kw)
+    def compile(self, device=None, **kw) -> CompiledProgram:
+        """Compile the decoder graph.  `device` co-stages this decoder
+        onto an existing staged image (disjoint DRAM range — see
+        ``program.compile_multi``) so one pool slot can serve a
+        heterogeneous model mix alongside other programs."""
+        return self.build_program().compile(device=device, **kw)
 
     def reference(self) -> "DecoderReference":
         return DecoderReference(self)

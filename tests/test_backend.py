@@ -254,3 +254,66 @@ def test_pallas_backend_reports_wall_time_and_bytes():
     # identical stream => identical DMA traffic on both engines
     assert stats["simulator"].dram_rd_bytes == stats["pallas"].dram_rd_bytes
     assert stats["simulator"].dram_wr_bytes == stats["pallas"].dram_wr_bytes
+
+
+def test_decode_cache_is_a_bounded_lru_with_counted_evictions():
+    """The process-wide decoded-stream cache holds at most
+    set_decode_cache_cap entries, evicts least-recently-HIT first, and
+    every eviction is counted — unbounded growth under a many-program
+    serving mix is a regression, silent eviction is too."""
+    from repro.core.backend import decode_cache_info, set_decode_cache_cap
+
+    class _FakeIsa:
+        insn_words = 2
+
+        def decode_stream(self, raw):
+            return [("decoded", raw.tobytes())]
+
+    spec = hwspec.pynq()
+    eng = PallasBackend()
+    isa = _FakeIsa()
+
+    def raw(i):
+        return np.full((1, 2), 7_000_000 + i, dtype=np.uint64)
+
+    base = decode_cache_info()
+    old_cap = base["cap"]
+    try:
+        set_decode_cache_cap(3)
+        assert decode_cache_info()["size"] <= 3
+        start = decode_cache_info()["evictions"]
+        # fill: 3 distinct streams fit (anything older gets trimmed)
+        for i in range(3):
+            _, ev = eng._decode_cached(spec, isa, raw(i))
+        filled = decode_cache_info()
+        assert filled["size"] == 3 and filled["cap"] == 3
+        # hit stream 0 to refresh its recency, then insert a 4th:
+        # stream 1 (now the LRU) must be the one evicted
+        hit, ev = eng._decode_cached(spec, isa, raw(0))
+        assert ev == 0 and hit == [("decoded", raw(0).tobytes())]
+        _, ev = eng._decode_cached(spec, isa, raw(3))
+        assert ev == 1, "insert over cap must evict exactly one entry"
+        _, ev = eng._decode_cached(spec, isa, raw(0))
+        assert ev == 0, "recently-hit stream must have survived"
+        _, ev = eng._decode_cached(spec, isa, raw(1))
+        assert ev == 1, "LRU stream must have been evicted"
+        assert decode_cache_info()["evictions"] >= start + 2
+        # shrinking the cap trims immediately and counts the trims
+        trimmed = set_decode_cache_cap(1)
+        assert trimmed == 2 and decode_cache_info()["size"] == 1
+        # cap 0 disables retention: nothing is kept, nothing grows
+        set_decode_cache_cap(0)
+        _, _ = eng._decode_cached(spec, isa, raw(4))
+        assert decode_cache_info()["size"] == 0
+        with pytest.raises(ValueError):
+            set_decode_cache_cap(-1)
+    finally:
+        set_decode_cache_cap(old_cap)
+
+
+def test_decode_evictions_flow_into_runstats_merge():
+    """RunStats carries per-call decode_evictions and merged() sums it —
+    the serving loop's visibility into cache churn."""
+    a = RunStats(decode_evictions=2)
+    b = RunStats(decode_evictions=1)
+    assert RunStats.merged([a, b]).decode_evictions == 3

@@ -58,6 +58,14 @@ POOL_GRAPHS = int(os.environ.get("REPRO_FUZZ_POOL_GRAPHS",
 PERSIST_GRAPHS = int(os.environ.get(
     "REPRO_FUZZ_PERSIST_GRAPHS",
     "24" if FUZZ_FLAVOR == "persistent" else "6"))
+# "sched" = random graphs routed through the continuous-batching
+# Scheduler (core.sched) with randomized admission window / gang width /
+# queue cap / backpressure policy; survivors byte-diffed against serial,
+# typed Shed outcomes accounted exactly (nightly flavor; a small
+# always-on sweep keeps tier-1 coverage).
+SCHED_GRAPHS = int(os.environ.get(
+    "REPRO_FUZZ_SCHED_GRAPHS",
+    "24" if FUZZ_FLAVOR == "sched" else "4"))
 
 _VEC_OPS = (AluOp.ADD, AluOp.MIN, AluOp.MAX, AluOp.MUL)
 
@@ -327,6 +335,85 @@ def _run_one_pool(seed: int) -> None:
 
 
 # ----------------------------------------------------------------------
+# sched flavor: random graphs through the continuous-batching scheduler
+# under randomized admission/backpressure configs; every survivor is
+# byte-diffed against serial execution and every loss is a typed Shed
+# ----------------------------------------------------------------------
+def _run_one_sched(seed: int) -> None:
+    from repro.core.program import compile_multi
+    from repro.core.sched import QueueFull, SchedConfig, Scheduler, Shed
+    from repro.core.serve import DevicePool
+
+    rng = np.random.default_rng(seed)
+    p, feeds = build_random_program(rng)
+    backend = ("simulator", "pallas")[int(rng.integers(0, 2))]
+    pool_size = int(rng.integers(1, 5))
+    multi = bool(rng.integers(0, 3) == 0)   # 1/3: two co-staged programs
+    if multi:
+        p2, feeds2 = build_random_program(rng)
+        progs = compile_multi([p, p2])
+        graphs = [(p, feeds), (p2, feeds2)]
+    else:
+        progs = [p.compile(use_cache=False)]
+        graphs = [(p, feeds)]
+    n_requests = int(rng.integers(2, 4 + 2 * pool_size))
+    cfg = SchedConfig(
+        window_us=float(rng.choice([200.0, 2000.0, 50000.0])),
+        gang_width=(None if rng.integers(0, 2)
+                    else int(rng.integers(1, pool_size + 1))),
+        queue_cap=int(rng.integers(1, n_requests + 2)),
+        policy=("reject", "shed_oldest")[int(rng.integers(0, 2))],
+        pipeline_depth=int(rng.integers(1, 3)))
+
+    def permute(feed):
+        return {k: rng.permutation(v.ravel()).reshape(v.shape)
+                for k, v in feed.items()}
+
+    picks = [int(rng.integers(0, len(progs))) for _ in range(n_requests)]
+    requests = [permute(graphs[pi][1]) for pi in picks]
+    serial = [progs[pi](backend=backend, **r)
+              for pi, r in zip(picks, requests)]
+
+    ctx = (f"seed={seed} backend={backend} pool={pool_size} "
+           f"multi={multi} cfg={cfg}")
+    with DevicePool(progs, size=pool_size, backend=backend) as pool:
+        sched = Scheduler(pool, cfg)
+        futs = []
+        for i in range(n_requests):
+            try:
+                futs.append((i, sched.submit(program=picks[i],
+                                             **requests[i])))
+            except QueueFull:
+                assert cfg.policy == "reject", \
+                    f"{ctx}: QueueFull under policy={cfg.policy}"
+        assert futs, f"{ctx}: every submit rejected (cap >= 1)"
+        survivors, shed = 0, 0
+        for i, f in futs:
+            try:
+                got = f.wait(timeout=600)
+            except Shed:
+                shed += 1
+                assert cfg.policy == "shed_oldest", \
+                    f"{ctx}: Shed under policy={cfg.policy}"
+                continue
+            survivors += 1
+            want = serial[i]
+            if not isinstance(got, dict):
+                got, want = {"out": got}, {"out": want}
+            for name in got:
+                np.testing.assert_array_equal(
+                    got[name], want[name],
+                    err_msg=f"{ctx} req={i} node={name}: windowed "
+                            "execution diverged from serial")
+        assert survivors >= 1, f"{ctx}: no request survived"
+        stats = sched.stats()
+        assert sum(s.completed for s in stats) == survivors, ctx
+        assert sum(s.shed for s in stats) == shed, ctx
+        assert sum(s.failed for s in stats) == 0, ctx
+        sched.close()
+
+
+# ----------------------------------------------------------------------
 # persistent flavor: random stateful graphs run >=3 consecutive calls,
 # byte-diffed against a stateful numpy reference and across engines
 # ----------------------------------------------------------------------
@@ -464,6 +551,8 @@ def test_fuzz_cross_backend(idx):
         _run_one_pool(FUZZ_SEED + idx)
     elif FUZZ_FLAVOR == "persistent":
         _run_one_persistent(FUZZ_SEED + idx)
+    elif FUZZ_FLAVOR == "sched":
+        _run_one_sched(FUZZ_SEED + idx)
     else:
         _run_one(FUZZ_SEED + idx)
 
@@ -481,6 +570,14 @@ def test_fuzz_persistent(idx):
     """Always-on stateful sweep; the nightly REPRO_FUZZ_FLAVOR=persistent
     job widens it and flips the main grid over too."""
     _run_one_persistent(FUZZ_SEED + 104729 + idx)
+
+
+@pytest.mark.parametrize("idx", range(SCHED_GRAPHS))
+def test_fuzz_sched(idx):
+    """Always-on continuous-batching sweep; the nightly
+    REPRO_FUZZ_FLAVOR=sched job widens it and flips the main grid over
+    too."""
+    _run_one_sched(FUZZ_SEED + 1299709 + idx)
 
 
 # optional hypothesis pass over the same generator space

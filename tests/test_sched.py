@@ -1,0 +1,395 @@
+"""Edge-of-envelope suite for the continuous-batching control plane.
+
+Every scheduler path that decides WHO runs TOGETHER — window timeout,
+deadline expiry, shed-oldest backpressure, mixed-program admission — is
+driven explicitly and byte-diffed against serial execution of the same
+compiled artifact: batching is a latency/throughput policy, never a
+numerics policy.  The failure-is-loud contract of the pool underneath is
+regression-tested by killing a slot mid-flight (a parked AND an active
+request must raise :class:`SlotDied` naming the request — never hang)
+and by a host op that throws (the exception surfaces at ``wait`` with
+the request id attached).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.program import Program, compile_multi
+from repro.core.sched import (VMAP_INTERPRET_CLIFF, DeadlineExpired,
+                              QueueFull, SchedConfig, Scheduler, Shed,
+                              auto_gang_width, predict_gang_cycles)
+from repro.core.scheduler import Epilogue, matmul_reference
+from repro.core.serve import DevicePool, PoolClosed, SlotDied
+
+BACKENDS = ("simulator", "pallas")
+_EP = Epilogue(shift=6)
+
+
+def _linear(rng, m=16, d=32, seed_tag=0):
+    """One-matmul serving program (constant weight) + reference."""
+    w = rng.integers(-64, 64, size=(d, d), dtype=np.int8)
+    p = Program()
+    x = p.input("x", (m, d))
+    p.output(p.matmul(x, p.constant(f"w{seed_tag}", w), epilogue=_EP))
+
+    def make():
+        return {"x": rng.integers(-64, 64, size=(m, d), dtype=np.int8)}
+
+    def ref(feed):
+        return matmul_reference(feed["x"], w, _EP)
+
+    return p, make, ref
+
+
+def _hostful(rng, hostfn, m=16, d=32):
+    """matmul -> host -> matmul: the multi-segment shape whose mid-stream
+    host stage exercises the pool's host worker."""
+    w1 = rng.integers(-64, 64, size=(d, d), dtype=np.int8)
+    w2 = rng.integers(-64, 64, size=(d, d), dtype=np.int8)
+    p = Program()
+    x = p.input("x", (m, d))
+    t = p.matmul(x, p.constant("w1", w1), epilogue=_EP)
+    t = p.host(hostfn, t, shape=(m, d), kind="mat")
+    p.output(p.matmul(t, p.constant("w2", w2), epilogue=_EP))
+
+    def make():
+        return {"x": rng.integers(-64, 64, size=(m, d), dtype=np.int8)}
+
+    def ref(feed):
+        a = matmul_reference(feed["x"], w1, _EP)
+        return matmul_reference(np.asarray(hostfn(a)), w2, _EP)
+
+    return p, make, ref
+
+
+# ----------------------------------------------------------------------
+# admission-window edges (satellite: scheduler edge tests)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_window_timeout_releases_gang_of_one(backend):
+    """A lone request under a gang_width the traffic never fills must
+    release alone when the window lapses — correct, counted, exact."""
+    rng = np.random.default_rng(0)
+    p, make, ref = _linear(rng)
+    compiled = p.compile(use_cache=False)
+    with DevicePool(compiled, size=2, backend=backend) as pool:
+        sched = Scheduler(pool, SchedConfig(window_us=2000.0,
+                                            gang_width=2))
+        feed = make()
+        t0 = time.perf_counter()
+        out = sched.submit(**feed).wait(timeout=60)
+        waited = time.perf_counter() - t0
+        np.testing.assert_array_equal(out, ref(feed))
+        st = sched.stats()[0]
+        assert st.window_timeouts == 1 and st.releases == 1
+        assert st.full_releases == 0
+        assert waited >= 0.002, "released before the window lapsed"
+        sched.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_full_window_releases_without_timeout(backend):
+    """gang_width submits arriving together release as one full gang
+    immediately (no timeout), and match serial byte for byte."""
+    rng = np.random.default_rng(1)
+    p, make, ref = _linear(rng)
+    compiled = p.compile(use_cache=False)
+    with DevicePool(compiled, size=4, backend=backend) as pool:
+        sched = Scheduler(pool, SchedConfig(window_us=200000.0,
+                                            gang_width=4))
+        feeds = [make() for _ in range(4)]
+        futs = [sched.submit(**f) for f in feeds]
+        for f, feed in zip(futs, feeds):
+            np.testing.assert_array_equal(f.wait(timeout=60), ref(feed))
+        st = sched.stats()[0]
+        assert st.full_releases == 1 and st.window_timeouts == 0
+        assert st.max_gang == 4 or backend == "simulator"
+        sched.close()
+
+
+def test_deadline_expires_while_parked():
+    """A parked request whose deadline lapses before release fails with
+    DeadlineExpired (typed, names the request) — and the loss shows up
+    in stats.expired, never silently."""
+    rng = np.random.default_rng(2)
+    p, make, _ = _linear(rng)
+    compiled = p.compile(use_cache=False)
+    with DevicePool(compiled, size=2, backend="simulator") as pool:
+        sched = Scheduler(pool, SchedConfig(window_us=500000.0,
+                                            gang_width=2))
+        f = sched.submit(deadline_us=1000.0, **make())
+        with pytest.raises(DeadlineExpired, match=r"request #\d+"):
+            f.wait(timeout=60)
+        assert sched.stats()[0].expired == 1
+        # the lane still works after the expiry
+        out = sched.submit(**make())
+        sched.flush()
+        out.wait(timeout=60)
+        sched.close()
+
+
+def test_backpressure_reject_and_shed_oldest():
+    """queue_cap is a hard bound: reject raises QueueFull at submit;
+    shed_oldest evicts the OLDEST parked request with a typed Shed."""
+    rng = np.random.default_rng(3)
+    p, make, ref = _linear(rng)
+    compiled = p.compile(use_cache=False)
+    with DevicePool(compiled, size=4, backend="simulator") as pool:
+        sched = Scheduler(pool, SchedConfig(
+            window_us=500000.0, gang_width=4, queue_cap=2,
+            policy="reject"))
+        f1, f2 = sched.submit(**make()), sched.submit(**make())
+        with pytest.raises(QueueFull, match="admission queue"):
+            sched.submit(**make())
+        assert sched.stats()[0].rejected == 1
+        sched.flush()
+        f1.wait(timeout=60)
+        f2.wait(timeout=60)
+        sched.close()
+
+    with DevicePool(compiled, size=4, backend="simulator") as pool:
+        sched = Scheduler(pool, SchedConfig(
+            window_us=500000.0, gang_width=4, queue_cap=2,
+            policy="shed_oldest"))
+        feeds = [make() for _ in range(3)]
+        futs = [sched.submit(**f) for f in feeds]
+        with pytest.raises(Shed, match=r"request #\d+"):
+            futs[0].wait(timeout=60)            # oldest was evicted
+        sched.flush()
+        for f, feed in zip(futs[1:], feeds[1:]):
+            np.testing.assert_array_equal(f.wait(timeout=60), ref(feed))
+        st = sched.stats()[0]
+        assert st.shed == 1 and st.completed == 2
+        sched.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mixed_programs_release_separately_and_never_gang(backend):
+    """Two co-staged programs through ONE pool and ONE scheduler: the
+    window groups per program, every accelerator gang is program-pure,
+    and both output streams match their serial baselines."""
+    rng = np.random.default_rng(4)
+    pa, make_a, ref_a = _linear(rng, d=32, seed_tag=0)
+    pb, make_b, ref_b = _hostful(
+        rng, lambda a: np.ascontiguousarray(a[::-1]))
+    ca, cb = compile_multi([pa, pb])
+    assert not ca.image_range.overlaps(cb.image_range)
+
+    gangs = []
+    orig = DevicePool._exec_accel
+
+    def spy(self, prog, step, group):
+        assert all(s.active.prog is prog for s in group), \
+            "mixed-program gang — admission isolation broken"
+        gangs.append((id(prog), len(group)))
+        return orig(self, prog, step, group)
+
+    DevicePool._exec_accel = spy
+    try:
+        with DevicePool([ca, cb], size=4, backend=backend) as pool:
+            sched = Scheduler(pool, SchedConfig(window_us=3000.0,
+                                                gang_width=2))
+            feeds = [(make_a(), 0) if i % 2 == 0 else (make_b(), 1)
+                     for i in range(8)]
+            futs = [sched.submit(program=pi, **f) for f, pi in feeds]
+            for fut, (feed, pi) in zip(futs, feeds):
+                want = (ref_a, ref_b)[pi](feed)
+                np.testing.assert_array_equal(fut.wait(timeout=120),
+                                              want)
+            sa, sb = sched.stats()
+            assert sa.completed == 4 and sb.completed == 4
+            assert sa.releases >= 1 and sb.releases >= 1
+            sched.close()
+    finally:
+        DevicePool._exec_accel = orig
+    assert len({pid for pid, _ in gangs}) == 2, \
+        "both programs must reach the accelerator"
+
+
+def test_sched_matches_serial_randomized_arrivals():
+    """Poisson-ish arrival jitter through the window on both engines —
+    byte-identical to serial on every request (the tentpole acceptance
+    invariant in miniature)."""
+    rng = np.random.default_rng(5)
+    p, make, ref = _linear(rng)
+    compiled = p.compile(use_cache=False)
+    for backend in BACKENDS:
+        with DevicePool(compiled, size=4, backend=backend) as pool:
+            sched = Scheduler(pool, SchedConfig(window_us=800.0))
+            feeds = [make() for _ in range(16)]
+            futs = []
+            for f in feeds:
+                futs.append(sched.submit(**f))
+                time.sleep(float(rng.random()) * 0.002)
+            for fut, feed in zip(futs, feeds):
+                np.testing.assert_array_equal(fut.wait(timeout=120),
+                                              ref(feed))
+            sched.close()
+
+
+# ----------------------------------------------------------------------
+# gang-width auto-tuning
+# ----------------------------------------------------------------------
+def test_auto_gang_width_respects_the_vmap_cliff():
+    """The tuner widens gangs while amortized cost drops and stops at
+    the interpret-mode recompile cliff: with the cliff far away it takes
+    everything offered; with tiles already past the cliff, wider gangs
+    stop paying and the walk stops early."""
+    rng = np.random.default_rng(6)
+    p, _, _ = _linear(rng, m=16, d=32)
+    compiled = p.compile(use_cache=False)
+    assert auto_gang_width(compiled, max_width=1) == 1
+    wide = auto_gang_width(compiled, max_width=8,
+                           cliff=VMAP_INTERPRET_CLIFF * 64)
+    assert 1 <= wide <= 8
+    narrow = auto_gang_width(compiled, max_width=8, cliff=1)
+    assert narrow <= wide, (narrow, wide)
+    # cost model sanity: per-request cycles never increase when the
+    # cliff is effectively infinite
+    c1 = predict_gang_cycles(compiled, 1, cliff=10 ** 9)
+    c4 = predict_gang_cycles(compiled, 4, cliff=10 ** 9)
+    assert c4 <= c1 * 4
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        SchedConfig(window_us=-1.0)
+    with pytest.raises(ValueError):
+        SchedConfig(gang_width=0)
+    with pytest.raises(ValueError):
+        SchedConfig(queue_cap=0)
+    with pytest.raises(ValueError):
+        SchedConfig(policy="drop_newest")
+    with pytest.raises(ValueError):
+        SchedConfig(pipeline_depth=0)
+
+
+# ----------------------------------------------------------------------
+# failure-is-loud regressions (satellite: PoolFuture error propagation)
+# ----------------------------------------------------------------------
+def test_kill_slot_mid_flight_raises_never_hangs():
+    """Kill the only slot while a request is INSIDE its host stage and
+    another is parked behind it: both waits raise SlotDied naming the
+    request, a later submit refuses loudly, and close() stays clean."""
+    entered, release = threading.Event(), threading.Event()
+
+    def blocker(a):
+        entered.set()
+        release.wait(timeout=60)
+        return np.ascontiguousarray(a[::-1])
+
+    rng = np.random.default_rng(7)
+    p, make, _ = _hostful(rng, blocker)
+    compiled = p.compile(use_cache=False)
+    pool = DevicePool(compiled, size=1, backend="simulator")
+    try:
+        f_active = pool.submit(**make())
+        assert entered.wait(timeout=60), "request never reached host"
+        f_parked = pool.submit(**make())
+        failed = pool.kill_slot(0)
+        assert failed == 2
+        with pytest.raises(SlotDied, match=r"request #\d+ .*slot 0"):
+            f_active.wait(timeout=60)
+        with pytest.raises(SlotDied, match=r"request #\d+ .*slot 0"):
+            f_parked.wait(timeout=60)
+        with pytest.raises(PoolClosed):
+            pool.submit(**make())
+        assert "[DEAD]" in pool.describe()
+    finally:
+        release.set()
+        pool.close()
+
+
+def test_kill_one_slot_of_many_spares_the_rest():
+    rng = np.random.default_rng(8)
+    p, make, ref = _linear(rng)
+    compiled = p.compile(use_cache=False)
+    with DevicePool(compiled, size=3, backend="simulator") as pool:
+        pool.kill_slot(1)
+        feeds = [make() for _ in range(6)]
+        futs = [pool.submit(**f) for f in feeds]
+        for f, feed in zip(futs, feeds):
+            np.testing.assert_array_equal(f.wait(timeout=60), ref(feed))
+        assert pool.slot_stats()[1].calls == 0
+
+
+def test_host_exception_surfaces_at_wait_with_request_id():
+    """A host op that throws fails THAT future (original exception type,
+    request id attached) and leaves the pool serving."""
+    boom = {"n": 0}
+
+    def sometimes(a):
+        boom["n"] += 1
+        if boom["n"] == 1:
+            raise ValueError("host stage exploded")
+        return np.ascontiguousarray(a[::-1])
+
+    rng = np.random.default_rng(9)
+    p, make, ref = _hostful(rng, sometimes)
+    compiled = p.compile(use_cache=False)
+    with DevicePool(compiled, size=1, backend="simulator") as pool:
+        with pytest.raises(ValueError, match="host stage exploded"):
+            pool.submit(**make()).wait(timeout=60)
+        feed = make()
+        got = pool.submit(**feed).wait(timeout=60)
+        boom["n"] = 1    # reference path must take the non-raising branch
+        np.testing.assert_array_equal(got, ref(feed))
+
+
+def test_kill_slot_fails_scheduler_futures_typed():
+    """SlotDied crosses the scheduler boundary: a windowed request whose
+    released gang lands on a dying slot raises SlotDied at the
+    SchedFuture, and the scheduler keeps serving."""
+    entered, release = threading.Event(), threading.Event()
+
+    def blocker(a):
+        entered.set()
+        release.wait(timeout=60)
+        return np.ascontiguousarray(a[::-1])
+
+    rng = np.random.default_rng(10)
+    p, make, ref = _hostful(rng, blocker)
+    compiled = p.compile(use_cache=False)
+    pool = DevicePool(compiled, size=2, backend="simulator")
+    try:
+        sched = Scheduler(pool, SchedConfig(window_us=200.0,
+                                            gang_width=1))
+        f = sched.submit(**make())
+        assert entered.wait(timeout=60)
+        victim = next(s.id for s in pool.slots
+                      if s.active is not None or s.queue)
+        pool.kill_slot(victim)
+        release.set()
+        with pytest.raises(SlotDied):
+            f.wait(timeout=60)
+        assert sched.stats()[0].failed == 1
+        feed = make()
+        np.testing.assert_array_equal(
+            sched.submit(**feed).wait(timeout=60), ref(feed))
+        sched.close()
+    finally:
+        release.set()
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# introspection
+# ----------------------------------------------------------------------
+def test_describe_dumps_scheduler_config_and_queue_depths():
+    rng = np.random.default_rng(11)
+    pa, _, _ = _linear(rng, seed_tag=0)
+    pb, _, _ = _linear(rng, seed_tag=1)
+    ca, cb = compile_multi([pa, pb])
+    with DevicePool([ca, cb], size=2, backend="simulator") as pool:
+        sched = Scheduler(pool, SchedConfig(window_us=1500.0,
+                                            gang_width=2,
+                                            queue_cap=64,
+                                            policy="shed_oldest"))
+        text = sched.describe()
+        for needle in ("sched[window 1500us", "cap 64", "shed_oldest",
+                       "vmap cliff", "2 program(s)", "q0"):
+            assert needle in text, f"describe() missing {needle!r}:\n{text}"
+        assert sched.queue_depths() == [0, 0]
+        sched.close()
