@@ -454,9 +454,100 @@ def run_decode(sessions: int = 4, steps: int = 32,
     return result
 
 
+def run_lowbit(calls: int = 20, out_json: str | None = None,
+               quiet: bool = False) -> dict:
+    """Sub-byte weight path: packed int4/int2 constant images + the
+    LUT-GEMM decode kernel.  Compiles the same weight-stationary matmul
+    at wgt_bits 8/4/2, reports the staged constant-image shrink (must be
+    >= 2x at int4 — the DevicePool clone-cost lever), byte-checks the
+    int4 program across both engines against the numpy packed reference,
+    and A/Bs the LUT kernel vs the dense GEMM on a decode-shaped call.
+    Writes ``benchmarks/BENCH_lowbit.json``."""
+    from repro.core.backend import PallasBackend, SimulatorBackend
+
+    n, k, m = 256, 256, 2            # decode shape: 2 rows, 256x256 weight
+    rng = np.random.default_rng(5)
+    x = rng.integers(-128, 128, size=(m, k), dtype=np.int8)
+    shift = 6
+
+    def build(bits):
+        spec = hwspec.pynq() if bits == 8 else hwspec.lowbit(bits)
+        qmin, qmax = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        w = rng.integers(qmin, qmax + 1, size=(n, k)).astype(np.int8)
+        prog = Program(spec)
+        xi = prog.input("x", x.shape)
+        prog.matmul(xi, prog.constant("w", w), epilogue=Epilogue(shift=shift))
+        return prog.compile(use_cache=False), w
+
+    result = dict(workload=f"matmul {m}x{k} @ const {n}x{k}", bits={})
+    ref_bytes = None
+    for bits in (8, 4, 2):
+        compiled, w = build(bits)
+        want = np.clip(
+            (x.astype(np.int64) @ w.T.astype(np.int64)) >> shift,
+            -128, 127).astype(np.int8)
+        got_sim = compiled(backend=SimulatorBackend(), x=x)
+        got_pl = compiled(backend=PallasBackend(), x=x)
+        exact = (np.array_equal(got_sim, want)
+                 and np.array_equal(got_pl, want))
+        assert exact, f"bits={bits} engines disagree with reference"
+        lut = sum(s.lut_launches for s in compiled.last_stats)
+
+        be_lut = PallasBackend(use_lut=True) if bits < 8 else None
+        be_dense = PallasBackend(use_lut=False)
+        compiled(backend=be_dense, x=x)           # warm jit caches
+        t0 = time.perf_counter()
+        for _ in range(calls):
+            compiled(backend=be_dense, x=x)
+        dense_s = (time.perf_counter() - t0) / calls
+        lut_s = None
+        if be_lut is not None:
+            compiled(backend=be_lut, x=x)
+            t0 = time.perf_counter()
+            for _ in range(calls):
+                compiled(backend=be_lut, x=x)
+            lut_s = (time.perf_counter() - t0) / calls
+
+        if bits == 8:
+            ref_bytes = compiled.const_bytes
+        row = dict(const_bytes=compiled.const_bytes,
+                   dram_bytes=compiled.device.dram._next,
+                   shrink_x=round(ref_bytes / compiled.const_bytes, 2),
+                   exact_both_engines=exact,
+                   lut_launches_auto=lut,
+                   dense_us_per_call=round(dense_s * 1e6, 1),
+                   lut_us_per_call=(round(lut_s * 1e6, 1)
+                                    if lut_s is not None else None))
+        result["bits"][str(bits)] = row
+    assert result["bits"]["4"]["shrink_x"] >= 2.0, \
+        "int4 constant image must shrink >= 2x vs int8"
+
+    if out_json is None:
+        out_json = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_lowbit.json")
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    if not quiet:
+        print(f"\nlowbit weights ({result['workload']}, {calls} calls):")
+        print(f"{'bits':>4} {'const B':>8} {'shrink':>7} {'exact':>6} "
+              f"{'dense us':>9} {'lut us':>8} {'lut auto':>8}")
+        for bits in ("8", "4", "2"):
+            r = result["bits"][bits]
+            lut_us = r["lut_us_per_call"]
+            print(f"{bits:>4} {r['const_bytes']:>8} "
+                  f"{r['shrink_x']:>6.1f}x {str(r['exact_both_engines']):>6} "
+                  f"{r['dense_us_per_call']:>9} "
+                  f"{lut_us if lut_us is not None else '-':>8} "
+                  f"{r['lut_launches_auto']:>8}")
+        print(f"-> {out_json}")
+    return result
+
+
 if __name__ == "__main__":
     run()
     run_conv()
     run_serving()
     run_pool()
     run_decode()
+    run_lowbit()

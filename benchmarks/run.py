@@ -71,6 +71,13 @@ def main() -> None:
                     f"x{drow['speedup_4v1_x']} pool4 vs pool1, "
                     f"p99 {drow['pools']['4']['p99_step_ms']}ms"))
 
+    _section("Sub-byte weights: packed int4/int2 constants + LUT-GEMM")
+    t0 = time.perf_counter()
+    lrow = bench_program.run_lowbit()
+    summary.append(("lowbit_weights", (time.perf_counter() - t0) * 1e6,
+                    f"x{lrow['bits']['4']['shrink_x']} const shrink at int4, "
+                    f"exact={lrow['bits']['4']['exact_both_engines']}"))
+
     _section("General conv2d fast path: coalesced vs eager (measured C2)")
     t0 = time.perf_counter()
     _, conv_speedup = bench_fig16_e2e.run_measured()

@@ -48,6 +48,12 @@
    program arrivals release together as full-width gangs, programs
    never mix in a gang, and backpressure is typed — then dump the whole
    control plane with describe().
+13. Shrink the weights below a byte: the same linear layer at bits=4
+   stores its weight constant int4-PACKED in the DRAM image (half the
+   staged bytes — describe() shows it), both engines decode the packed
+   stream bit-exactly, decode-shaped calls auto-route to the T-MAC-style
+   LUT-GEMM kernel, and the int4 output tracks the int8 path's dequant
+   reference within the coarser quantization step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -270,6 +276,30 @@ def main() -> None:
               f"in a gang); control plane:")
         print(sched.describe())
         sched.close()
+
+    # --- 13. sub-byte weights: int4 packed storage + LUT-GEMM decode ---
+    from repro.core.backend import PallasBackend, SimulatorBackend
+    from repro.models.quantized import VtaLinear
+
+    wf = rng.normal(size=(96, 64)).astype(np.float32) * 0.1
+    xf = rng.normal(size=(2, 96)).astype(np.float32)   # decode-shaped
+    lin8, lin4 = VtaLinear(wf, bits=8), VtaLinear(wf, bits=4)
+    y8, y4 = lin8(xf), lin4(xf)
+    # the packed program is bit-exact across both engines...
+    assert np.array_equal(lin4(xf, backend=PallasBackend()),
+                          lin4(xf, backend=SimulatorBackend()))
+    c8 = next(iter(lin8._programs.values()))
+    c4 = next(iter(lin4._programs.values()))
+    assert c4.const_bytes * 2 == c8.const_bytes       # int4 = half the bytes
+    # ...and decode-shaped calls route through the LUT-GEMM kernel
+    lin4(xf, backend=PallasBackend())
+    luts = sum(s.lut_launches for s in c4.last_stats)
+    # int4 output tracks the int8 path within the coarser quant step
+    q_step = float(np.abs(y4 - xf @ wf).max())
+    print(f"int4 VtaLinear: {c4.describe().splitlines()[0]}")
+    print(f"  const {c4.const_bytes}B packed vs {c8.const_bytes}B int8, "
+          f"{luts} LUT-GEMM launches, |y4 - x@W|max {q_step:.3f} "
+          f"(int8 path {np.abs(y8 - xf @ wf).max():.3f})")
 
 
 if __name__ == "__main__":

@@ -196,17 +196,35 @@ class PallasBackend:
 
     name = "pallas"
 
+    #: auto LUT selection: per-tile activation rows at or below this are
+    #: "decode-shaped" (weight traffic dominates; the table transform is
+    #: cheap) and route to the LUT-GEMM kernel when weights are sub-byte
+    LUT_MAX_ROWS = 16
+
     def __init__(self, interpret: Optional[bool] = None,
                  check_tokens: bool = True,
                  coalesce_subgrids: bool = True,
                  batch_tiles: bool = True,
-                 cache_decode: bool = True):
+                 cache_decode: bool = True,
+                 use_lut: Optional[bool] = None):
         # interpret=None -> auto (native on TPU, interpreter elsewhere)
         self.interpret = interpret
         self.check_tokens = check_tokens
         self.coalesce_subgrids = coalesce_subgrids
         self.batch_tiles = batch_tiles
         self.cache_decode = cache_decode
+        # use_lut: None -> auto (sub-byte weights AND decode-shaped tiles);
+        # True forces the LUT kernel for every sub-byte GEMM; False pins
+        # the dense kernel (A/B baseline).  int8 specs never use it.
+        self.use_lut = use_lut
+
+    def _lut_select(self, spec: HardwareSpec, rows: int) -> bool:
+        """Per-shape kernel choice for one GEMM launch group: T-MAC LUT
+        lookup vs dense MXU GEMM.  Both are bit-exact; this is purely a
+        roofline call, so the fuzzer sweeps it freely."""
+        if not spec.wgt_packed or self.use_lut is False:
+            return False
+        return bool(self.use_lut) or rows <= self.LUT_MAX_ROWS
 
     # ------------------------------------------------------------------
     def execute(self, spec: HardwareSpec, device: Device, stream: np.ndarray,
@@ -836,6 +854,7 @@ class PallasBackend:
         import jax.numpy as jnp
 
         from ..kernels._compat import resolve_interpret
+        from ..kernels.lut_gemm.kernel import lut_gemm_pallas
         from ..kernels.vta_gemm.kernel import vta_gemm_pallas
         interpret = resolve_interpret(self.interpret)
 
@@ -861,6 +880,15 @@ class PallasBackend:
             kw = dict(interpret=interpret)
             if shift is not None:
                 kw.update(epilogue="requant", shift=shift)
+            # per-shape kernel choice: sub-byte weights on decode-shaped
+            # tiles go through the T-MAC LUT kernel (same operands, same
+            # epilogue contract, bit-identical output)
+            use_lut = self._lut_select(spec, Rg)
+
+            def gemm_call(Ap, Wp):
+                if use_lut:
+                    return lut_gemm_pallas(Ap, Wp, bits=spec.wgt_bits, **kw)
+                return vta_gemm_pallas(Ap, Wp, **kw)
             # tiles whose weight DATA is identical (gang members serving
             # the same constant weights) can row-concat into one taller
             # GEMM instead of spending a padded vmap lane each — the
@@ -883,10 +911,11 @@ class PallasBackend:
                         Ap[j * Rg:(j + 1) * Rg, :K] = A_alls[t]
                     Wp = np.zeros((Kp, Cp), np.int8)
                     Wp[:K, :Cg] = Ws[g[0]].T
-                    out = np.asarray(vta_gemm_pallas(
-                        jnp.asarray(Ap), jnp.asarray(Wp), **kw))
+                    out = np.asarray(gemm_call(jnp.asarray(Ap),
+                                               jnp.asarray(Wp)))
                     for s_ in {id(statss[t]): statss[t] for t in g}.values():
                         s_.tile_batches += 1
+                        s_.lut_launches += int(use_lut)
                     for j, t in enumerate(g):
                         mats[t] = out[j * Rg:(j + 1) * Rg,
                                       :Cg].astype(np.int32)
@@ -900,8 +929,13 @@ class PallasBackend:
                     Aps.append(Ap)
                     Wps.append(Wp)
                 if T == 1:
-                    outs = [vta_gemm_pallas(jnp.asarray(Aps[0]),
-                                            jnp.asarray(Wps[0]), **kw)]
+                    outs = [gemm_call(jnp.asarray(Aps[0]),
+                                      jnp.asarray(Wps[0]))]
+                elif use_lut:
+                    outs = jax.vmap(functools.partial(
+                        lut_gemm_pallas, bits=spec.wgt_bits, **kw))(
+                        jnp.asarray(np.stack(Aps)),
+                        jnp.asarray(np.stack(Wps)))
                 else:
                     outs = jax.vmap(functools.partial(vta_gemm_pallas,
                                                       **kw))(
@@ -909,6 +943,7 @@ class PallasBackend:
                         jnp.asarray(np.stack(Wps)))
                 for s_ in {id(s_): s_ for s_ in statss}.values():
                     s_.tile_batches += 1
+                    s_.lut_launches += int(use_lut)
                 outs = np.asarray(outs)
                 for t in range(T):
                     mats[t] = outs[t][:Rg, :Cg].astype(np.int32)

@@ -54,9 +54,26 @@ class HardwareSpec:
     alu_init_interval: int = 2             # §2.5: tensor ALU II >= 2
     queue_depth: int = 512                 # command-queue depth (wide window)
 
+    def __post_init__(self):
+        # sub-byte storage is weight-only (activations stay int8): the
+        # packed WGT element must still be a whole number of bytes
+        if self.wgt_bits not in (1, 2, 4, 8):
+            raise ValueError(f"wgt_bits must be 1, 2, 4 or 8, "
+                             f"got {self.wgt_bits}")
+        if self.block_out * self.block_in * self.wgt_bits % 8:
+            raise ValueError("wgt element is not byte-aligned: "
+                             f"{self.block_out}x{self.block_in}"
+                             f"x{self.wgt_bits}b")
+
     # ------------------------------------------------------------------
     # element ("tensor register") geometry
     # ------------------------------------------------------------------
+    @property
+    def wgt_packed(self) -> bool:
+        """Sub-byte weight storage: DRAM/SRAM-load bytes are b-bit packed;
+        the GEMM core still computes on sign-extended int8 values."""
+        return self.wgt_bits < 8
+
     @property
     def inp_elem_bytes(self) -> int:
         return self.batch * self.block_in * self.inp_bits // 8
@@ -150,6 +167,19 @@ class HardwareSpec:
 def pynq() -> HardwareSpec:
     """The paper's evaluation build (§5)."""
     return HardwareSpec()
+
+
+def lowbit(bits: int = 4, base: HardwareSpec | None = None) -> HardwareSpec:
+    """A template instance with packed sub-byte weights (the
+    representation-flexibility claim: only the weight width changes; the
+    ISA encoding, scheduler and both engines adapt).  The WGT SRAM keeps
+    the same element DEPTH (bytes scale down with the element width):
+    letting the depth grow 8/bits-fold instead would widen the uop
+    address fields past the 32-bit uop budget — the derived-ISA
+    constraint surfacing exactly as §2.2 describes."""
+    base = base or pynq()
+    return base.replace(wgt_bits=bits,
+                        wgt_buff_bytes=base.wgt_buff_bytes * bits // 8)
 
 
 def pynq_batch2() -> HardwareSpec:

@@ -65,6 +65,70 @@ def unblock_nchw(blocked: np.ndarray, N: int, C: int) -> np.ndarray:
 
 
 # ----------------------------------------------------------------------
+# sub-byte weight packing (wgt_bits in {1, 2, 4}).
+#
+# A WGT tensor-register element stays one DMA unit, but its
+# (BLOCK_OUT x BLOCK_IN) values are stored as b-bit two's-complement
+# fields packed 8/b per byte, little-endian within the byte (value j of
+# the row-major flattened element lands at byte j*b//8, shifted left by
+# (j*b) % 8).  `hwspec.wgt_elem_bytes` already scales with wgt_bits, so
+# element-granular DMA addressing is unchanged — only the bytes shrink.
+# ----------------------------------------------------------------------
+def pack_bits(a: np.ndarray, bits: int) -> np.ndarray:
+    """Pack int values along the LAST axis into b-bit fields -> uint8.
+
+    The last axis is padded with zeros to a multiple of 8//bits; output
+    last axis is ceil(n * bits / 8) bytes.  Values must lie in the b-bit
+    two's-complement range — out-of-range input raises (a silent mask
+    would corrupt weights bit-exactness is supposed to catch).
+    """
+    if bits not in (1, 2, 4):
+        raise ValueError(f"pack_bits: bits must be 1, 2 or 4, got {bits}")
+    a = np.asarray(a)
+    qmin, qmax = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    if a.size and (a.min() < qmin or a.max() > qmax):
+        raise ValueError(
+            f"pack_bits: values outside int{bits} range [{qmin}, {qmax}]: "
+            f"[{a.min()}, {a.max()}]")
+    ppb = 8 // bits                      # values per byte
+    a = pad_to(a.astype(np.int16), a.ndim - 1, ppb)
+    u = (a & ((1 << bits) - 1)).astype(np.uint8)
+    u = u.reshape(a.shape[:-1] + (a.shape[-1] // ppb, ppb))
+    shifts = (np.arange(ppb, dtype=np.uint8) * bits)
+    return np.bitwise_or.reduce(u << shifts, axis=-1).astype(np.uint8)
+
+
+def unpack_bits(packed: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`: uint8 bytes -> n sign-extended int8
+    values along the last axis (padding tail dropped)."""
+    if bits not in (1, 2, 4):
+        raise ValueError(f"unpack_bits: bits must be 1, 2 or 4, got {bits}")
+    packed = np.asarray(packed, np.uint8)
+    ppb = 8 // bits
+    shifts = (np.arange(ppb, dtype=np.uint8) * bits)
+    u = ((packed[..., None] >> shifts) & ((1 << bits) - 1)).astype(np.int8)
+    sign = np.int8(1 << (bits - 1))
+    vals = ((u ^ sign) - sign).reshape(packed.shape[:-1] + (-1,))
+    return vals[..., :n].copy()
+
+
+def pack_wgt_elems(blocked: np.ndarray, bits: int) -> np.ndarray:
+    """Blocked weights (..., BLOCK_OUT, BLOCK_IN) int8 -> packed
+    (..., BLOCK_OUT*BLOCK_IN*bits//8) uint8 — one packed byte-row per
+    tensor-register element (== `spec.wgt_elem_bytes`)."""
+    bo, bi = blocked.shape[-2], blocked.shape[-1]
+    flat = blocked.reshape(blocked.shape[:-2] + (bo * bi,))
+    return pack_bits(flat, bits)
+
+
+def unpack_wgt_elems(packed: np.ndarray, bits: int,
+                     block_out: int, block_in: int) -> np.ndarray:
+    """Inverse of :func:`pack_wgt_elems` -> (..., BLOCK_OUT, BLOCK_IN) int8."""
+    flat = unpack_bits(packed, bits, block_out * block_in)
+    return flat.reshape(packed.shape[:-1] + (block_out, block_in))
+
+
+# ----------------------------------------------------------------------
 # matmul layouts:  A:(M,K) int8,  W:(N,K) int8,  C:(M,N)
 # ----------------------------------------------------------------------
 def pack_inp(a: np.ndarray, spec: HardwareSpec) -> np.ndarray:

@@ -129,13 +129,34 @@ class TensorMeta:
             return (_ceil_div(n, lane), spec.batch, spec.block_out)
         raise ValueError(self.kind)
 
+    def is_packed(self, spec: HardwareSpec) -> bool:
+        """Sub-byte DRAM storage: weight kinds under a wgt_bits<8 spec
+        store b-bit packed bytes (``layout.pack_bits``) instead of one
+        int8 per value.  Activations/accumulators never pack."""
+        return self.kind in ("wgt", "cwgt") and spec.wgt_packed
+
+    def storage_shape(self, spec: HardwareSpec) -> Tuple[int, ...]:
+        """Shape of the array actually living in DRAM: the blocked shape,
+        except packed weights collapse the trailing (BLOCK_OUT, BLOCK_IN)
+        element into `wgt_elem_bytes` packed bytes."""
+        bs = self.blocked_shape(spec)
+        if self.is_packed(spec):
+            return bs[:-2] + (spec.wgt_elem_bytes,)
+        return bs
+
+    def storage_dtype(self, spec: HardwareSpec):
+        return np.uint8 if self.is_packed(spec) else self.np_dtype()
+
     def nbytes(self, spec: HardwareSpec) -> int:
-        return int(np.prod(self.blocked_shape(spec))) \
-            * np.dtype(self.np_dtype()).itemsize
+        return int(np.prod(self.storage_shape(spec))) \
+            * np.dtype(self.storage_dtype(spec)).itemsize
 
     def elem_bytes(self, spec: HardwareSpec) -> int:
         """Bytes per DMA element (one tensor-register row) of this layout —
-        the buffer's required DRAM alignment."""
+        the buffer's required DRAM alignment.  For weight kinds this is
+        `spec.wgt_elem_bytes`, which already shrinks with wgt_bits."""
+        if self.kind in ("wgt", "cwgt"):
+            return spec.wgt_elem_bytes
         bs = self.blocked_shape(spec)
         return int(np.prod(bs[-2:])) * np.dtype(self.np_dtype()).itemsize
 
@@ -145,20 +166,26 @@ class TensorMeta:
         if arr.shape != self.shape:
             raise ValueError(f"expected shape {self.shape}, got {arr.shape}")
         if self.kind == "mat":
-            return layout.block2d(arr, spec.batch, self.block)
-        if self.kind == "wgt":
-            return layout.block2d(arr, spec.block_out, spec.block_in)
-        if self.kind == "conv":
-            return layout.block_nchw(arr, spec.batch, self.block)
-        if self.kind == "cwgt":
-            return layout.block_nchw(arr, spec.block_out, spec.block_in)
-        if self.kind == "vec":
-            out = np.zeros(self.blocked_shape(spec), self.np_dtype())
-            out.reshape(-1)[:arr.size] = arr
-            return out
-        raise ValueError(self.kind)
+            blocked = layout.block2d(arr, spec.batch, self.block)
+        elif self.kind == "wgt":
+            blocked = layout.block2d(arr, spec.block_out, spec.block_in)
+        elif self.kind == "conv":
+            blocked = layout.block_nchw(arr, spec.batch, self.block)
+        elif self.kind == "cwgt":
+            blocked = layout.block_nchw(arr, spec.block_out, spec.block_in)
+        elif self.kind == "vec":
+            blocked = np.zeros(self.blocked_shape(spec), self.np_dtype())
+            blocked.reshape(-1)[:arr.size] = arr
+        else:
+            raise ValueError(self.kind)
+        if self.is_packed(spec):
+            return layout.pack_wgt_elems(blocked, spec.wgt_bits)
+        return blocked
 
     def unpack(self, blocked: np.ndarray, spec: HardwareSpec) -> np.ndarray:
+        if self.is_packed(spec):
+            blocked = layout.unpack_wgt_elems(
+                blocked, spec.wgt_bits, spec.block_out, spec.block_in)
         if self.kind in ("mat", "wgt"):
             return layout.unblock2d(blocked, *self.shape)
         if self.kind in ("conv", "cwgt"):
@@ -715,6 +742,9 @@ def _build(prog: Program, fence_mode: str = "buffer",
     const_names = {n.name for n in prog.nodes
                    if n.op == "input" and n.const is not None}
     persistent_ids = [n.idx for n in prog.nodes if n.persistent]
+    const_bytes = sum(n.meta.nbytes(spec) for n in prog.nodes
+                      if n.op == "input" and n.const is not None
+                      and not n.persistent)
     return CompiledProgram(spec=spec, nodes=list(prog.nodes), addrs=addrs,
                            steps=steps, input_ids=input_ids,
                            output_ids=out_ids, device=rt.device,
@@ -723,6 +753,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
                            fence_mode=fence_mode, prestage=prestage,
                            const_names=const_names,
                            staged_bytes=staged_bytes,
+                           const_bytes=const_bytes,
                            arena_bytes=arena.bytes,
                            arena_blocks=arena.blocks,
                            arena_reuse_hits=arena.reuse_hits,
@@ -772,6 +803,8 @@ class CompiledProgram:
     prestage: bool = True
     const_names: set = field(default_factory=set)
     staged_bytes: int = 0          # encoded streams staged at compile time
+    const_bytes: int = 0           # constants staged at compile time (as
+    #                                stored: sub-byte weights count packed)
     arena_bytes: int = 0           # fresh DRAM backing the intermediate arena
     arena_blocks: int = 0
     arena_reuse_hits: int = 0      # intermediates served from a dead block
@@ -852,6 +885,10 @@ class CompiledProgram:
                 f"({self.arena_reuse_hits} reused, "
                 f"{self.arena_splits} split)"
                 f" | staged {self.staged_bytes}B")
+        if self.const_bytes:
+            tail += f" | constants {self.const_bytes}B"
+            if self.spec.wgt_packed:
+                tail += f" (wgt int{self.spec.wgt_bits} packed)"
         if self.persistent_ids:
             names = ",".join(
                 f"{self.nodes[i].name}@{self.addrs[i]:#x}"
@@ -884,7 +921,8 @@ class CompiledProgram:
         meta = node.meta
         blocked = dev.dram.read(
             self.addrs[nid], meta.nbytes(self.spec),
-            dtype=meta.np_dtype(), shape=meta.blocked_shape(self.spec))
+            dtype=meta.storage_dtype(self.spec),
+            shape=meta.storage_shape(self.spec))
         return meta.unpack(blocked, self.spec)
 
     # ---- persistent state (sessions) -----------------------------------

@@ -33,7 +33,11 @@ def calibrate(x: np.ndarray, bits: int = 8,
               percentile: float = 100.0) -> QuantParams:
     """Symmetric scale from the max-abs (or percentile) statistic."""
     a = np.abs(np.asarray(x, np.float64)).ravel()
-    amax = (np.percentile(a, percentile) if percentile < 100.0
+    # both branches must tolerate size-0 input (an empty calibration batch
+    # yields the 1e-8 floor): np.percentile raises on empty arrays, so it
+    # gets the same guard the max branch has via max(initial=0.0)
+    amax = (float(np.percentile(a, percentile))
+            if percentile < 100.0 and a.size
             else float(a.max(initial=0.0)))
     amax = max(amax, 1e-8)
     return QuantParams(scale=amax / ((1 << (bits - 1)) - 1), bits=bits)
@@ -57,11 +61,16 @@ def per_channel_scales(w: np.ndarray, axis: int = 0, bits: int = 8) -> np.ndarra
 
 
 def quantize_per_channel(w: np.ndarray, scales: np.ndarray,
-                         axis: int = 0) -> np.ndarray:
+                         axis: int = 0, bits: int = 8) -> np.ndarray:
+    """Quantize with per-channel scales; `bits` must match the value the
+    scales were computed for (``per_channel_scales(bits=...)``) — clipping
+    to the b-bit range, not a hard-coded int8 one, so sub-byte scales
+    don't silently saturate at the int8 boundary."""
     shape = [1] * w.ndim
     shape[axis] = -1
     q = np.round(np.asarray(w, np.float64) / scales.reshape(shape))
-    return np.clip(q, -128, 127).astype(np.int8)
+    qmin, qmax = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return np.clip(q, qmin, qmax).astype(np.int8)
 
 
 def choose_requant_shift(sx: float, sw: float, sy: float,
@@ -81,6 +90,11 @@ def fold_batchnorm(gamma: np.ndarray, beta: np.ndarray, mean: np.ndarray,
 
 
 def quantize_bias(bias_f: np.ndarray, sx: float, sw: float) -> np.ndarray:
-    """Bias is added in the int32 accumulator domain: b_q = b / (sx*sw)."""
-    return np.round(bias_f / max(sx * sw, 1e-30)).astype(np.int64).clip(
-        -(1 << 31), (1 << 31) - 1).astype(np.int32)
+    """Bias is added in the int32 accumulator domain: b_q = b / (sx*sw).
+
+    The clip happens in the FLOAT domain: a pathological sx*sw (tiny
+    product scale) can push b/(sx*sw) past int64 range, where a cast
+    before the clip is undefined-overflow (wraps to INT64_MIN on most
+    platforms) instead of saturating."""
+    q = np.round(np.asarray(bias_f, np.float64) / max(sx * sw, 1e-30))
+    return np.clip(q, -(1 << 31), (1 << 31) - 1).astype(np.int32)

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import layout
 from .driver import Device
 from .hwspec import HardwareSpec
 from .isa import (AluInsn, AluOp, DepFlags, FinishInsn, GemmInsn, Insn,
@@ -123,6 +124,9 @@ class RunStats:
     # them (tiles_resolved / tile_batches = batching factor)
     tiles_resolved: int = 0
     tile_batches: int = 0
+    # kernel launches that went through the LUT-GEMM path (sub-byte
+    # weights, memory-bound decode shapes) instead of the dense MXU GEMM
+    lut_launches: int = 0
     # gang width of the run that produced this stats object: 1 for a
     # plain execute; N when the stream ran on N pooled devices in
     # lockstep (PallasBackend.execute_gang) — wall_time_s is then the
@@ -154,7 +158,7 @@ class RunStats:
                       "coalesced_alu_insns", "eager_gemm_insns",
                       "eager_alu_insns", "n_join_barriers",
                       "n_buffer_fences", "staging_bytes_per_call",
-                      "tiles_resolved", "tile_batches",
+                      "tiles_resolved", "tile_batches", "lut_launches",
                       "decode_evictions"):
                 setattr(out, f, getattr(out, f) + getattr(r, f))
             out.gang_size = max(out.gang_size, r.gang_size)
@@ -381,8 +385,20 @@ class Simulator:
             sram += insn.x_pad_0
             byte_addr = (insn.dram_base + y * insn.x_stride) * elem_bytes
             nbytes = insn.x_size * elem_bytes
-            data = dram.read(byte_addr, nbytes, dtype=dtype,
-                             shape=(insn.x_size,) + (eshape if eshape != (1,) else ()))
+            if insn.memory_type == MemId.WGT and self.spec.wgt_packed:
+                # sub-byte weights: DRAM holds b-bit packed element rows
+                # (elem_bytes already reflects the packing); the WGT SRAM
+                # always holds sign-extended int8 — the single decode
+                # point BOTH engines share (PallasBackend routes its DMA
+                # through this method), keeping them bit-exact for free.
+                raw = dram.read(byte_addr, nbytes)
+                data = layout.unpack_wgt_elems(
+                    raw.reshape(insn.x_size, elem_bytes),
+                    self.spec.wgt_bits, self.spec.block_out,
+                    self.spec.block_in)
+            else:
+                data = dram.read(byte_addr, nbytes, dtype=dtype,
+                                 shape=(insn.x_size,) + (eshape if eshape != (1,) else ()))
             if insn.memory_type == MemId.UOP:
                 buf[sram:sram + insn.x_size] = data
             else:

@@ -1,0 +1,3 @@
+from .kernel import lut_gemm_pallas  # noqa: F401
+from .ops import lut_gemm  # noqa: F401
+from .ref import lut_gemm_ref  # noqa: F401

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the LUT GEMM kernel.
+
+The LUT decomposition is algebraically the plain integer GEMM over the
+sign-extended weights, so the oracle IS the dense dot with the identical
+epilogue — any divergence from the table path is a kernel bug.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_gemm_ref(a: jax.Array, w: jax.Array, *, epilogue: str = "none",
+                 shift: int = 0) -> jax.Array:
+    acc = jax.lax.dot_general(
+        a.astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if epilogue == "none":
+        return acc
+    if epilogue == "requant":
+        q = jax.lax.shift_right_arithmetic(acc, jnp.int32(shift))
+        return jnp.clip(q, -128, 127).astype(jnp.int8)
+    raise ValueError(epilogue)

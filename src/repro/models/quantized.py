@@ -80,15 +80,21 @@ class VtaLinear:
     """
 
     def __init__(self, w: np.ndarray, spec=None, backend: Any = None,
-                 virtual_threads: int = 2):
+                 virtual_threads: int = 2, bits: int = 8):
         w = np.asarray(w, np.float32)          # (d_in, d_out)
         if w.ndim != 2:
             raise ValueError(f"expected a 2-D weight, got {w.shape}")
         self.d_in, self.d_out = w.shape
-        self.spec = spec or _hwspec.pynq()
+        self.bits = bits
+        # bits < 8: weights quantize to the b-bit range and the program's
+        # hardware template stores them b-bit packed in DRAM (the staged
+        # constant shrinks 8/bits-fold; decode-shaped calls route through
+        # the LUT-GEMM kernel on the Pallas backend)
+        base = spec or _hwspec.pynq()
+        self.spec = _hwspec.lowbit(bits, base) if bits < 8 else base
         self.backend = backend
         self.virtual_threads = virtual_threads
-        self.qw = q.calibrate(w)
+        self.qw = q.calibrate(w, bits=bits)
         self.w_q = q.quantize(w, self.qw).T.copy()   # (N=d_out, K=d_in)
         self._w_float = w
         self._qy: Optional[q.QuantParams] = None

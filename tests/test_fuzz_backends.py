@@ -66,6 +66,14 @@ PERSIST_GRAPHS = int(os.environ.get(
 SCHED_GRAPHS = int(os.environ.get(
     "REPRO_FUZZ_SCHED_GRAPHS",
     "24" if FUZZ_FLAVOR == "sched" else "4"))
+# "lowbit" = random graphs on packed sub-byte weight specs
+# (hwspec.lowbit(4|2|1)): weights constrained to the b-bit range, the
+# staged/packed DRAM bytes byte-diffed against the numpy packed
+# reference (layout.pack_bits), both engines cross-checked, and the
+# Pallas LUT-GEMM vs dense kernel A/B'd on the same stream.
+LOWBIT_GRAPHS = int(os.environ.get(
+    "REPRO_FUZZ_LOWBIT_GRAPHS",
+    "24" if FUZZ_FLAVOR == "lowbit" else "6"))
 
 _VEC_OPS = (AluOp.ADD, AluOp.MIN, AluOp.MAX, AluOp.MUL)
 
@@ -414,6 +422,124 @@ def _run_one_sched(seed: int) -> None:
 
 
 # ----------------------------------------------------------------------
+# lowbit flavor: random graphs on packed sub-byte weight specs; the
+# packed DRAM image is byte-diffed against the numpy packed reference
+# and the LUT-GEMM kernel is A/B'd against the dense kernel per graph
+# ----------------------------------------------------------------------
+def build_random_lowbit_program(rng):
+    """Random graph on an int4/int2/int1-weight template: every weight
+    tensor (matmul and conv, constant and per-call input) carries values
+    in the b-bit two's-complement range; activations stay full int8."""
+    bits = int(rng.choice([4, 4, 2, 1]))
+    base = hwspec.pynq() if rng.integers(0, 4) else \
+        hwspec.HardwareSpec(batch=2)
+    spec = hwspec.lowbit(bits, base)
+    qmin, qmax = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    p = Program(spec, virtual_threads=int(rng.integers(1, 3)))
+    feeds = {}
+    consts = {}
+
+    def feed(name, shape, lo=-64, hi=64):
+        feeds[name] = rng.integers(lo, hi, size=shape, dtype=np.int8)
+        return p.input(name, shape)
+
+    def wfeed(name, shape):
+        w = rng.integers(qmin, qmax + 1, size=shape, dtype=np.int8)
+        if rng.integers(0, 2):          # constant: staged packed at compile
+            consts[name] = w
+            return p.constant(name, w)
+        feeds[name] = w                 # input: staged packed per call
+        return p.input(name, shape)
+
+    flavor = rng.integers(0, 3)
+    if flavor == 0:                      # matmul chain
+        depth = int(rng.integers(1, 4))
+        m = int(rng.integers(1, 41))
+        k = int(rng.integers(1, 41))
+        t = feed("x", (m, k))
+        for i in range(depth):
+            n = int(rng.integers(1, 41))
+            t = p.matmul(t, wfeed(f"w{i}", (n, k)),
+                         epilogue=_rand_epilogue(rng, n, spec),
+                         name=f"mm{i}")
+            k = n
+    elif flavor == 1:                    # single conv, any lowering
+        s = _rand_conv_shape(rng, spec)
+        p.conv2d(feed("x", (s.n, s.ic, s.h, s.w)),
+                 wfeed("k", (s.oc, s.ic, s.kh, s.kw)),
+                 s, epilogue=_rand_epilogue(rng, s.oc, spec),
+                 lowering=_rand_lowering(rng, s, spec), name="cv")
+    else:                                # independent matmul + conv
+        m, k, n = (int(rng.integers(1, 33)) for _ in range(3))
+        mm = p.matmul(feed("a", (m, k)), wfeed("w", (n, k)),
+                      epilogue=_rand_epilogue(rng, n, spec), name="mm")
+        s = _rand_conv_shape(rng, spec)
+        cv = p.conv2d(feed("x", (s.n, s.ic, s.h, s.w)),
+                      wfeed("kc", (s.oc, s.ic, s.kh, s.kw)),
+                      s, epilogue=_rand_epilogue(rng, s.oc, spec),
+                      lowering=_rand_lowering(rng, s, spec), name="cv")
+        for r in (mm, cv):
+            p.output(r)
+    return p, feeds, consts
+
+
+def _check_packed_image(compiled, weights):
+    """Byte-diff every sub-byte weight buffer in DRAM against the numpy
+    packed reference (TensorMeta.pack -> layout.pack_bits)."""
+    from repro.core import layout as _layout  # noqa: F401  (reference path)
+    for name, w in weights.items():
+        nid = compiled.input_ids[name]
+        meta = compiled.nodes[nid].meta
+        if meta.kind not in ("wgt", "cwgt"):
+            continue
+        raw = compiled.device.dram.read(compiled.addrs[nid],
+                                        meta.nbytes(compiled.spec))
+        want = meta.pack(w, compiled.spec)
+        assert want.dtype == np.uint8, "sub-byte weights must store packed"
+        np.testing.assert_array_equal(
+            raw, want.reshape(-1),
+            err_msg=f"{name}: packed DRAM bytes diverge from the numpy "
+                    "packed reference")
+
+
+def _run_one_lowbit(seed: int) -> None:
+    from repro.core.backend import PallasBackend
+
+    rng = np.random.default_rng(seed)
+    p, feeds, consts = build_random_lowbit_program(rng)
+    refs = evaluate_reference(p, {**feeds, **consts})
+    outs = {}
+    for fence_mode in ("buffer", "barrier"):
+        compiled = p.compile(use_cache=False, fence_mode=fence_mode)
+        outs[fence_mode] = cross_check(compiled, feeds)
+        _check_packed_image(compiled, {**feeds, **consts})
+        for i in compiled.output_ids:
+            name = p.nodes[i].name
+            np.testing.assert_array_equal(
+                outs[fence_mode][name], refs[i],
+                err_msg=f"seed={seed} fence_mode={fence_mode} node={name} "
+                        f"({compiled.describe()})")
+    for name in outs["buffer"]:
+        np.testing.assert_array_equal(
+            outs["buffer"][name], outs["barrier"][name],
+            err_msg=f"seed={seed} node={name}: fenced stream diverged "
+                    f"from the barrier baseline")
+    # kernel A/B on the Pallas engine: the T-MAC LUT path and the dense
+    # MXU path must both reproduce the numpy reference bit-exactly
+    compiled = p.compile(use_cache=False)
+    for use_lut in (True, False):
+        got = compiled(backend=PallasBackend(use_lut=use_lut), **feeds)
+        if not isinstance(got, dict):
+            got = {p.nodes[compiled.output_ids[0]].name: got}
+        for i in compiled.output_ids:
+            name = p.nodes[i].name
+            np.testing.assert_array_equal(
+                got[name], refs[i],
+                err_msg=f"seed={seed} use_lut={use_lut} node={name}: "
+                        "kernel A/B diverged from the numpy reference")
+
+
+# ----------------------------------------------------------------------
 # persistent flavor: random stateful graphs run >=3 consecutive calls,
 # byte-diffed against a stateful numpy reference and across engines
 # ----------------------------------------------------------------------
@@ -553,6 +679,8 @@ def test_fuzz_cross_backend(idx):
         _run_one_persistent(FUZZ_SEED + idx)
     elif FUZZ_FLAVOR == "sched":
         _run_one_sched(FUZZ_SEED + idx)
+    elif FUZZ_FLAVOR == "lowbit":
+        _run_one_lowbit(FUZZ_SEED + idx)
     else:
         _run_one(FUZZ_SEED + idx)
 
@@ -570,6 +698,15 @@ def test_fuzz_persistent(idx):
     """Always-on stateful sweep; the nightly REPRO_FUZZ_FLAVOR=persistent
     job widens it and flips the main grid over too."""
     _run_one_persistent(FUZZ_SEED + 104729 + idx)
+
+
+@pytest.mark.parametrize("idx", range(LOWBIT_GRAPHS))
+def test_fuzz_lowbit(idx):
+    """Always-on sub-byte weight sweep (packed DRAM bytes byte-diffed
+    against the numpy packed reference; LUT vs dense kernel A/B); the
+    nightly REPRO_FUZZ_FLAVOR=lowbit job widens it and flips the main
+    grid over too."""
+    _run_one_lowbit(FUZZ_SEED + 15485863 + idx)
 
 
 @pytest.mark.parametrize("idx", range(SCHED_GRAPHS))
