@@ -93,6 +93,14 @@ def main() -> None:
                     f"exact={mcell['modes']['windowed']['exact']} "
                     "(full: python -m benchmarks.loadgen)"))
 
+    _section("Chaos smoke: self-healing pool under seeded fault injection")
+    t0 = time.perf_counter()
+    from benchmarks import bench_chaos
+    crow = bench_chaos.run(smoke=True)
+    summary.append(("chaos_smoke", (time.perf_counter() - t0) * 1e6,
+                    f"exact={crow['exact']} ratio={crow['goodput_ratio']} "
+                    "(full: python -m benchmarks.bench_chaos)"))
+
     _section("Dry-run roofline table (from experiments/dryrun)")
     t0 = time.perf_counter()
     try:

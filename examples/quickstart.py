@@ -54,6 +54,13 @@
    stream bit-exactly, decode-shaped calls auto-route to the T-MAC-style
    LUT-GEMM kernel, and the int4 output tracks the int8 path's dequant
    reference within the coarser quantization step.
+14. Kill a serving slot mid-dialogue and watch the pool heal itself:
+   the slot respawns from the pristine staged image (max_respawns), the
+   decode session transparently restores its KV bytes from the last
+   checkpoint (checkpoint_every=1 — restored_from_step is visible,
+   never silent), the dialogue continues bit-exact against the same
+   eager reference, and describe() carries the death/respawn/restore
+   accounting.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -300,6 +307,32 @@ def main() -> None:
     print(f"  const {c4.const_bytes}B packed vs {c8.const_bytes}B int8, "
           f"{luts} LUT-GEMM launches, |y4 - x@W|max {q_step:.3f} "
           f"(int8 path {np.abs(y8 - xf @ wf).max():.3f})")
+
+    # --- 14. self-healing: kill a slot mid-dialogue, respawn + restore ---
+    with DevicePool(cdec, size=2, backend="pallas", max_respawns=2,
+                    checkpoint_every=1) as hpool:
+        hsess = hpool.session(slot=0)
+        href = dec.reference()
+        for t in range(4):
+            xi = dec.token(t)
+            assert np.array_equal(hsess.submit(x=xi).wait(300),
+                                  href.step(xi)), "decode diverged!"
+        hpool.kill_slot(0)                   # chaos: the slot dies NOW
+        st = hpool.slot_stats()[0]
+        assert st.deaths == 1 and st.respawns == 1, \
+            "slot did not respawn from the pristine image!"
+        assert hsess.stats.restored_from_step == 4, \
+            "session did not restore from its checkpoint!"
+        for t in range(4, 6):                # the dialogue just continues
+            xi = dec.token(t)
+            assert np.array_equal(hsess.submit(x=xi).wait(300),
+                                  href.step(xi)), \
+                "restored decode diverged from the eager reference!"
+        print(f"self-healed mid-dialogue: slot 0 died and respawned, "
+              f"session restored from step "
+              f"{hsess.stats.restored_from_step} (checkpoint_every=1), "
+              f"decode continued bit-exact; recovery accounting:")
+        print("\n".join(hpool.describe().splitlines()[1:]))
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """VTA core: the paper's contribution (template, ISA, runtime, simulator,
 scheduler, program-level JIT) as a composable package."""
-from . import backend, compiler, conv, driver, hwspec, isa  # noqa: F401
-from . import layout, microop, pipeline_model, program  # noqa: F401
+from . import backend, chaos, compiler, conv, driver, hwspec  # noqa: F401
+from . import isa, layout, microop, pipeline_model, program  # noqa: F401
 from . import quantize, runtime, sched, scheduler, serve  # noqa: F401
 from . import simulator, workloads  # noqa: F401
+from .chaos import Fault, FaultPlan  # noqa: F401
 from .backend import (CrossBackendChecker, ExecutionBackend,  # noqa: F401
                       PallasBackend, SimulatorBackend, assert_fast_path,
                       decode_cache_info, resolve_backend,
@@ -16,5 +17,6 @@ from .runtime import Runtime  # noqa: F401
 from .sched import (DeadlineExpired, QueueFull, SchedConfig,  # noqa: F401
                     SchedFuture, Scheduler, Shed, auto_gang_width)
 from .scheduler import Epilogue, SramPartition  # noqa: F401
-from .serve import (BatchServer, DevicePool, PoolFuture,  # noqa: F401
-                    SlotDied, serve_batch)
+from .serve import (BatchServer, DevicePool, IntegrityError,  # noqa: F401
+                    PoolFuture, SessionStats, SlotDied, WaitTimeout,
+                    WatchdogConfig, WatchdogTimeout, serve_batch)

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import zlib
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -968,6 +969,51 @@ class CompiledProgram:
             raw = image[n.name]
             dev.dram.write(self.addrs[nid], raw)
             dev.flush_cache(self.addrs[nid], raw.nbytes)
+
+    # ---- DRAM integrity (self-healing serving) -------------------------
+    def integrity_regions(self, persistent: bool = False
+                          ) -> List[Tuple[str, int, int]]:
+        """(name, addr, nbytes) of every checksummed DRAM region:
+        compile-time constants by default (immutable for the program's
+        lifetime — any change is corruption), or the persistent buffers
+        with ``persistent=True`` (mutable only at call boundaries, so a
+        checksum recorded after a call must still hold before the
+        next)."""
+        if persistent:
+            ids = list(self.persistent_ids)
+        else:
+            ids = [n.idx for n in self.nodes
+                   if n.op == "input" and n.const is not None
+                   and not n.persistent]
+        return [(self.nodes[i].name, self.addrs[i],
+                 self.nodes[i].meta.nbytes(self.spec)) for i in ids]
+
+    def integrity_checksum(self, device: Any = None,
+                           persistent: bool = False) -> int:
+        """CRC32 over the (fixed-order) concatenation of the integrity
+        regions on `device`.  A mismatch against the pristine compile-
+        time device (constants) or the last recorded post-call value
+        (persistent) means the DRAM image was corrupted — the serving
+        layer restages from pristine / restores from a session
+        checkpoint instead of computing on flipped bits."""
+        dev = device if device is not None else self.device
+        crc = 0
+        for _, addr, nbytes in self.integrity_regions(persistent):
+            crc = zlib.crc32(dev.dram.read(addr, nbytes).tobytes(), crc)
+        return crc
+
+    def restage_constants(self, device: Any, pristine: Any = None) -> int:
+        """Copy every constant region from the `pristine` device (default:
+        the compile-time device) onto `device` — the repair action after
+        an integrity failure.  Raw same-address writes, never an
+        allocation.  Returns bytes restaged."""
+        src = pristine if pristine is not None else self.device
+        total = 0
+        for _, addr, nbytes in self.integrity_regions():
+            device.dram.write(addr, src.dram.read(addr, nbytes))
+            device.flush_cache(addr, nbytes)
+            total += nbytes
+        return total
 
     # ---- execution -----------------------------------------------------
     def check_inputs(self, inputs: Dict[str, np.ndarray]) -> None:

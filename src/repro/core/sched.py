@@ -60,7 +60,8 @@ import numpy as np
 
 from .isa import GemmInsn, IsaLayout, LoadStoreInsn
 from .program import CompiledProgram
-from .serve import DevicePool, PoolClosed, PoolFuture, Session
+from .serve import (DevicePool, PoolClosed, PoolFuture, Session, SlotDied,
+                    WaitTimeout)
 from .simulator import TimingModel, replay_timing
 
 #: vmap interpret-mode cliff measured in PR 5: batching more than ~24
@@ -247,7 +248,7 @@ class SchedFuture:
     def wait(self, timeout: Optional[float] = None
              ) -> Union[np.ndarray, Dict[str, np.ndarray]]:
         if not self._done.wait(timeout):
-            raise TimeoutError(
+            raise WaitTimeout(
                 f"sched request #{self.seq} not done within {timeout}s")
         if self._exc is not None:
             raise self._exc
@@ -341,6 +342,9 @@ class Scheduler:
         self.pool = pool
         self.config = config or SchedConfig()
         nprog = len(pool.programs)
+        self._timing = timing               # retained: re-tune on death
+        self._fixed_width = self.config.gang_width
+        self._tuned_alive = len(pool)       # widths tuned for this many
         if self.config.gang_width is not None:
             w = max(1, min(self.config.gang_width, len(pool)))
             self.gang_widths = [w] * nprog
@@ -534,6 +538,13 @@ class Scheduler:
             for p in q:
                 if p.deadline_at is not None and p.deadline_at > now:
                     t = p.deadline_at if t is None else min(t, p.deadline_at)
+        for q in self._queues:
+            if q and len(self._eligible_of(q)) != len(q):
+                # someone is parked for a dead slot: poll so a respawn
+                # (which the pool does not signal us about) is noticed
+                poll = now + max(window_s, 0.005)
+                t = poll if t is None else min(t, poll)
+                break
         return None if t is None else t - now
 
     def _expire_deadlines(self, now: float) -> None:
@@ -556,22 +567,102 @@ class Scheduler:
                 q.clear()
                 q.extend(keep)
 
+    def _retune_if_needed(self) -> None:
+        """Re-tune gang widths when the alive-slot count changed (lock
+        held): a pool degraded by a slot death must not stall full-width
+        releases waiting for a width it can no longer co-schedule, and a
+        respawn restores the original widths.  Auto widths re-run
+        :func:`auto_gang_width` against the surviving count; fixed
+        widths re-clamp."""
+        alive = sum(1 for s in self.pool.slots if not s.dead)
+        if alive == self._tuned_alive or alive < 1:
+            return
+        self._tuned_alive = alive
+        if self._autotuned:
+            self.gang_widths = [
+                auto_gang_width(c, alive, timing=self._timing,
+                                cliff=self.config.vmap_cliff,
+                                eps=self.config.autotune_eps)
+                for c in self.pool.programs]
+        else:
+            w = max(1, min(self._fixed_width, alive))
+            self.gang_widths = [w] * len(self.pool.programs)
+
+    def _eligible_of(self, q: Deque[_Parked]) -> List[_Parked]:
+        """Servable-now members of one queue (lock held).  A request
+        pinned to a dead slot (or a lost session) stays PARKED — its
+        deadline keeps counting toward DeadlineExpired while a respawn
+        races to revive the slot — instead of poisoning a released
+        batch with the SlotDied the whole gang would then share."""
+        if all(s.dead for s in self.pool.slots):
+            return []
+        out: List[_Parked] = []
+        for p in q:
+            if p.session is not None:
+                st = p.session._state
+                if st.lost or self.pool.slots[st.slot_id].dead:
+                    continue
+            out.append(p)
+        return out
+
+    def _sweep_unservable(self) -> None:
+        """Flush/close is final: a parked request whose slot never came
+        back (or whose session state is lost, or with every slot dead)
+        fails typed :class:`SlotDied` now instead of parking forever on
+        a drain that would otherwise never finish (lock held)."""
+        for pi, q in enumerate(self._queues):
+            if not q:
+                continue
+            keep: Deque[_Parked] = deque()
+            swept = False
+            for p in q:
+                why = None
+                if all(s.dead for s in self.pool.slots):
+                    why = "every pool slot is dead"
+                elif p.session is not None:
+                    st = p.session._state
+                    if st.lost:
+                        why = (f"session {st.sid}'s state was lost when "
+                               f"its slot died")
+                    elif self.pool.slots[st.slot_id].dead:
+                        why = (f"session {st.sid}'s slot {st.slot_id} "
+                               f"is dead")
+                if why is None:
+                    keep.append(p)
+                    continue
+                swept = True
+                self._stats[pi].failed += 1
+                self._pending -= 1
+                p.future._fail(SlotDied(
+                    f"request #{p.future.seq} unservable at flush: "
+                    f"{why}"))
+            if swept:
+                q.clear()
+                q.extend(keep)
+                self._idle.notify_all()
+
     def _pick_batch(self, now: float
                     ) -> Optional[Tuple[int, List[_Parked], str]]:
         """FIFO-fair batch selection (lock held): among programs whose
         queue is ready (width reached, window expired, or flushing),
-        release the one with the oldest head."""
+        release the one with the oldest head.  Readiness and membership
+        consider only ELIGIBLE requests (see :meth:`_eligible_of`):
+        requests parked for a down slot neither release nor block their
+        queue-mates."""
         window_s = self.config.window_us * 1e-6
         best: Optional[Tuple[float, int, str]] = None
         for pi, q in enumerate(self._queues):
             if not q:
                 continue
+            elig = self._eligible_of(q)
+            if not elig:
+                continue
             width = self.gang_widths[pi]
-            if len(q) >= width:
+            if len(elig) >= width:
                 reason = "full"
             elif self._flush or self._closed:
                 reason = "flush"
-            elif (now - q[0].future.submit_at >= window_s
+            elif (now - elig[0].future.submit_at >= window_s
                     and self._outstanding == 0):
                 # window expired AND the pool is idle: releasing a
                 # partial gang while gangs are still executing would
@@ -580,15 +671,19 @@ class Scheduler:
                 reason = "window"
             else:
                 continue
-            head = q[0].future.submit_at
+            head = elig[0].future.submit_at
             if best is None or head < best[0]:
                 best = (head, pi, reason)
         if best is None:
             return None
         _, pi, reason = best
         q = self._queues[pi]
-        batch = [q.popleft()
-                 for _ in range(min(self.gang_widths[pi], len(q)))]
+        elig = self._eligible_of(q)
+        batch = elig[:min(self.gang_widths[pi], len(elig))]
+        chosen = {id(p) for p in batch}
+        keep = [p for p in q if id(p) not in chosen]
+        q.clear()
+        q.extend(keep)
         return pi, batch, reason
 
     def _dispatch_loop(self) -> None:
@@ -598,7 +693,10 @@ class Scheduler:
                     if self._closed and self._pending == 0:
                         return
                     now = time.perf_counter()
+                    self._retune_if_needed()
                     self._expire_deadlines(now)
+                    if self._flush or self._closed:
+                        self._sweep_unservable()
                     picked = self._pick_batch(now)
                     if picked is not None:
                         break

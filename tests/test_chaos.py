@@ -1,0 +1,687 @@
+"""Self-healing serving plane regression suite.
+
+Every recovery path is exercised against the same oracle discipline as
+the rest of the differential suite: whatever survives a fault must be
+BYTE-EXACT against a fault-free serial run of the same compiled
+artifact, and whatever is lost must fail with a typed error — never a
+hang, never silently-wrong bytes.
+
+Covers (ISSUE 9):
+  * slot respawn from the pristine staged image + death/respawn stats,
+    post-respawn outputs byte-diffed vs fault-free serial;
+  * session checkpoint/restore replaying to the correct step on both
+    engines x both fence modes;
+  * stateless request retry (transparent success, exhaustion surfacing
+    the ORIGINAL typed error with the attempt count);
+  * segment watchdog (fires on a hung host fn; never fires on the
+    slowest legitimate gang — the TimingModel false-positive guard);
+  * DRAM integrity checksums + restage-from-pristine under injected
+    bit-flips, and the seeded FaultPlan that scripts all of the above;
+  * the satellites: atomic session swap under kill, parked-deadline vs
+    respawn ordering in the Scheduler, PoolFuture.wait(timeout=)
+    raising typed WaitTimeout.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import hwspec
+from repro.core.chaos import FAULT_KINDS, Fault, FaultPlan
+from repro.core.program import Program
+from repro.core.sched import DeadlineExpired, SchedConfig, Scheduler
+from repro.core.scheduler import Epilogue, matmul_reference
+from repro.core.serve import (DevicePool, PoolClosed, SlotDied,
+                              WaitTimeout, WatchdogConfig,
+                              WatchdogTimeout)
+
+BACKENDS = ("simulator", "pallas")
+_EP = Epilogue(shift=6, relu=True)
+
+
+def _mlp(rng, m=16, d=32, layers=2):
+    ws = [rng.integers(-64, 64, size=(d, d), dtype=np.int8)
+          for _ in range(layers)]
+    p = Program()
+    t = p.input("x", (m, d))
+    for i, w in enumerate(ws):
+        t = p.matmul(t, p.constant(f"w{i}", w), epilogue=_EP)
+
+    def make():
+        return {"x": rng.integers(-64, 64, size=(m, d), dtype=np.int8)}
+
+    def ref(feed):
+        r = feed["x"]
+        for w in ws:
+            r = matmul_reference(r, w, _EP)
+        return r
+
+    return p, make, ref
+
+
+def _hostful(rng, hostfn, m=16, d=32):
+    """matmul -> host -> matmul: a request that can be caught INSIDE
+    its host stage (the deterministic mid-flight kill hook)."""
+    w1 = rng.integers(-64, 64, size=(d, d), dtype=np.int8)
+    w2 = rng.integers(-64, 64, size=(d, d), dtype=np.int8)
+    p = Program()
+    x = p.input("x", (m, d))
+    t = p.matmul(x, p.constant("w1", w1), epilogue=_EP)
+    t = p.host(hostfn, t, shape=(m, d), kind="mat")
+    p.output(p.matmul(t, p.constant("w2", w2), epilogue=_EP))
+
+    def make():
+        return {"x": rng.integers(-64, 64, size=(m, d), dtype=np.int8)}
+
+    def ref(feed):
+        a = matmul_reference(feed["x"], w1, _EP)
+        return matmul_reference(np.asarray(hostfn(a)), w2, _EP)
+
+    return p, make, ref
+
+
+def _accumulator(m=8, k=32):
+    """Stateful decode-shaped program: each call accumulates into a
+    persistent buffer, so the session's step count is byte-visible."""
+    p = Program(hwspec.pynq())
+    x = p.input("x", (m, k))
+    w = p.constant("w", np.random.default_rng(0).integers(
+        -8, 8, (k, k), dtype=np.int8))
+    h = p.matmul(x, w, epilogue=Epilogue(shift=5), name="h")
+    state = p.persistent("state", (m, k))
+
+    def accum(hv, sv):
+        ns = np.clip(sv.astype(np.int32) + hv, -128, 127).astype(np.int8)
+        return ns, ns
+
+    p.output(p.host(accum, h, state, shape=(m, k), kind="mat",
+                    updates=(state,)))
+    return p
+
+
+# ----------------------------------------------------------------------
+# FaultPlan
+# ----------------------------------------------------------------------
+def test_fault_plan_seeded_and_consumed_once():
+    a = FaultPlan.random(seed=11, n_gangs=300, slots=4, rate=0.25)
+    b = FaultPlan.random(seed=11, n_gangs=300, slots=4, rate=0.25)
+    assert [f for f in a.faults] == [f for f in b.faults]  # deterministic
+    assert len(a) > 0
+    assert all(f.kind in FAULT_KINDS for f in a.faults)
+    assert all(f.gang != 0 for f in a.faults)   # gang 0 always clean
+    g = a.faults[0].gang
+    took = a.take(g)
+    assert took and a.take(g) == []             # consume-once
+    with pytest.raises(ValueError, match="not in"):
+        Fault(kind="meteor", gang=1)
+    with pytest.raises(ValueError, match="rate"):
+        FaultPlan.random(seed=1, n_gangs=10, slots=2, rate=1.5)
+
+
+# ----------------------------------------------------------------------
+# slot respawn
+# ----------------------------------------------------------------------
+def test_respawn_then_byte_exact():
+    """A killed slot respawns from the pristine image and every
+    post-recovery output byte-matches the fault-free serial run."""
+    rng = np.random.default_rng(21)
+    p, make, ref = _mlp(rng)
+    c = p.compile(use_cache=False)
+    feeds = [make() for _ in range(6)]
+    serial = [c(backend="simulator", **f) for f in feeds]
+    with DevicePool(c, size=2, backend="simulator",
+                    max_respawns=2) as pool:
+        assert pool.kill_slot(0) == 0
+        st = pool.slots[0].stats
+        assert not pool.slots[0].dead       # rebuilt, back in rotation
+        assert (st.deaths, st.respawns) == (1, 1)
+        futs = [pool.submit(**f) for f in feeds]
+        for fu, want, feed in zip(futs, serial, feeds):
+            got = fu.wait(timeout=120)
+            np.testing.assert_array_equal(got, want)
+            np.testing.assert_array_equal(got, ref(feed))
+        # both slots served: the respawned one is genuinely alive
+        assert all(s.stats.calls > 0 for s in pool.slots)
+        assert "1 death(s)/1 respawn(s)" in pool.describe()
+
+
+def test_respawn_cap_is_honored():
+    """Past max_respawns the slot stays dead; respawn_slot() is the
+    explicit ops override."""
+    rng = np.random.default_rng(22)
+    p, make, _ = _mlp(rng)
+    c = p.compile(use_cache=False)
+    with DevicePool(c, size=2, backend="simulator",
+                    max_respawns=1) as pool:
+        pool.kill_slot(0)
+        assert not pool.slots[0].dead       # 1st death: respawned
+        pool.kill_slot(0)
+        assert pool.slots[0].dead           # cap reached: stays dead
+        assert pool.slots[0].stats.deaths == 2
+        assert pool.slots[0].stats.respawns == 1
+        assert pool.respawn_slot(0)         # ops override ignores cap
+        assert not pool.slots[0].dead
+        assert not pool.respawn_slot(0)     # alive: no-op
+        pool.submit(**make()).wait(timeout=120)
+
+
+# ----------------------------------------------------------------------
+# stateless retry
+# ----------------------------------------------------------------------
+def test_retry_survives_mid_flight_kill_byte_exact():
+    """A stateless request killed INSIDE its host stage retries on the
+    respawned pool and succeeds byte-exactly; the future records the
+    attempt count."""
+    entered, release = threading.Event(), threading.Event()
+
+    def blocker(a):
+        entered.set()
+        release.wait(timeout=60)
+        return np.ascontiguousarray(a[::-1])
+
+    rng = np.random.default_rng(23)
+    p, make, ref = _hostful(rng, blocker)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=2, backend="simulator", max_respawns=4,
+                      retries=2, retry_backoff_s=0.01)
+    try:
+        feed = make()
+        f = pool.submit(**feed)
+        assert entered.wait(timeout=60), "request never reached host"
+        victim = next(s.id for s in pool.slots
+                      if s.active is not None or s.queue)
+        release.set()
+        pool.kill_slot(victim)
+        got = f.wait(timeout=120)           # transparent recovery
+        assert f.attempts == 2
+        np.testing.assert_array_equal(got, ref(feed))
+    finally:
+        release.set()
+        pool.close()
+
+
+def test_retry_exhaustion_surfaces_original_error_and_attempts():
+    """When every slot is gone the ORIGINAL typed error surfaces, with
+    the attempt count on both the error and the future."""
+    rng = np.random.default_rng(24)
+    p, make, _ = _mlp(rng)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=1, backend="simulator", retries=2,
+                      retry_backoff_s=0.05)  # no respawn: retry starves
+    try:
+        f = pool.submit(**make())
+        pool.kill_slot(0)
+        with pytest.raises(SlotDied, match=r"request #\d+") as ei:
+            f.wait(timeout=120)
+        assert f.attempts >= 2              # it did try again
+        assert ei.value.attempts == f.attempts
+    finally:
+        pool.close()
+
+
+def test_stateful_slot_resident_submits_never_retry():
+    """Sessionless submits of a PERSISTENT program mutate implicit
+    per-slot state — a replay would double-advance it, so they must
+    fail typed instead of retrying."""
+    c = _accumulator().compile(use_cache=False)
+    pool = DevicePool(c, size=1, backend="simulator", retries=3,
+                      retry_backoff_s=0.01)
+    try:
+        x = np.ones((8, 32), np.int8)
+        pool.submit(x=x).wait(timeout=120)
+        f = pool.submit(x=x)
+        pool.kill_slot(0)
+        with pytest.raises(SlotDied):
+            f.wait(timeout=120)
+        assert f.attempts == 1              # never re-submitted
+    finally:
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# session checkpoint / restore
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("fence_mode", ("buffer", "barrier"))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_session_restore_replays_to_correct_step(backend, fence_mode):
+    """Kill a session's slot mid-conversation: the session restores its
+    last checkpoint onto the respawned slot, replays to the correct
+    step, and the final state byte-matches a fault-free serial run —
+    on both engines x both fence modes."""
+    c = _accumulator().compile(use_cache=False, fence_mode=fence_mode)
+    x = np.ones((8, 32), np.int8)
+    # fault-free serial oracle: 6 calls on a fresh clone
+    dev = c.device.clone(trim=True)
+    serial = [c.run_on(dev, backend=backend, inputs={"x": x}).outputs
+              for _ in range(6)]
+    pool = DevicePool(c, size=2, backend=backend, max_respawns=2,
+                      checkpoint_every=1)
+    try:
+        s = pool.session(slot=0)
+        for i in range(4):
+            got = s.submit(x=x).wait(timeout=120)
+            np.testing.assert_array_equal(got, serial[i])
+        pool.kill_slot(0)
+        assert not pool.slots[0].dead
+        assert s.stats.restores == 1
+        assert s.stats.restored_from_step == 4   # replayed steps VISIBLE
+        assert s.calls == 4
+        for i in range(4, 6):                    # conversation continues
+            got = s.submit(x=x).wait(timeout=120)
+            np.testing.assert_array_equal(got, serial[i])
+        # the accumulator's state buffer holds exactly the last output
+        np.testing.assert_array_equal(s.state("state"), serial[5])
+    finally:
+        pool.close()
+
+
+def test_session_checkpoint_interval_rolls_back_unsnapshotted_steps():
+    """checkpoint_every=2 with a kill after 3 calls restores step 2 —
+    the replayed step is visible via restored_from_step, and re-running
+    it reconverges with the serial oracle."""
+    c = _accumulator().compile(use_cache=False)
+    x = np.ones((8, 32), np.int8)
+    dev = c.device.clone(trim=True)
+    serial = [c.run_on(dev, backend="simulator",
+                       inputs={"x": x}).outputs for _ in range(4)]
+    pool = DevicePool(c, size=1, backend="simulator", max_respawns=2,
+                      checkpoint_every=2)
+    try:
+        s = pool.session(slot=0)
+        for i in range(3):
+            s.submit(x=x).wait(timeout=120)
+        assert s.stats.checkpoints == 1 and s.stats.checkpoint_step == 2
+        pool.kill_slot(0)
+        assert s.calls == 2                      # rolled back to ckpt
+        assert s.stats.restored_from_step == 2
+        got = s.submit(x=x).wait(timeout=120)    # replays step 3
+        np.testing.assert_array_equal(got, serial[2])
+        got = s.submit(x=x).wait(timeout=120)
+        np.testing.assert_array_equal(got, serial[3])
+    finally:
+        pool.close()
+
+
+def test_session_without_checkpoint_is_lost_typed():
+    """No checkpoint to fall back on: the session is marked lost and
+    every later submit fails typed — never silently-wrong state."""
+    c = _accumulator().compile(use_cache=False)
+    x = np.ones((8, 32), np.int8)
+    pool = DevicePool(c, size=1, backend="simulator", max_respawns=2)
+    try:
+        s = pool.session(slot=0)
+        s.submit(x=x).wait(timeout=120)
+        pool.kill_slot(0)
+        with pytest.raises(SlotDied, match="lost"):
+            s.submit(x=x)
+        # a VIRGIN session (never ran) survives the same death
+        pool2_sess = pool.session(slot=0)
+        pool2_sess.submit(x=x).wait(timeout=120)
+        assert pool2_sess.calls == 1
+    finally:
+        pool.close()
+
+
+def test_rehome_when_respawn_cap_exhausted():
+    """A checkpointed session whose slot stays dead (cap exhausted) is
+    re-homed to a survivor and keeps serving from its snapshot."""
+    c = _accumulator().compile(use_cache=False)
+    x = np.ones((8, 32), np.int8)
+    dev = c.device.clone(trim=True)
+    serial = [c.run_on(dev, backend="simulator",
+                       inputs={"x": x}).outputs for _ in range(3)]
+    pool = DevicePool(c, size=2, backend="simulator", max_respawns=0,
+                      checkpoint_every=1)
+    try:
+        s = pool.session(slot=0)
+        for i in range(2):
+            s.submit(x=x).wait(timeout=120)
+        pool.kill_slot(0)
+        assert pool.slots[0].dead               # no respawn budget
+        assert s.slot_id == 1                   # re-homed to survivor
+        assert s.stats.rehomes == 1
+        got = s.submit(x=x).wait(timeout=120)
+        np.testing.assert_array_equal(got, serial[2])
+    finally:
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# satellite: atomic session swap under kill
+# ----------------------------------------------------------------------
+def test_kill_during_session_swap_never_half_swaps():
+    """Kill the slot while a session swap-out/swap-in is IN PROGRESS:
+    the swap completes atomically under the slot lock before the
+    respawn replaces the device, so the swapped-out session's host
+    image is complete and it keeps serving byte-exactly."""
+    c = _accumulator().compile(use_cache=False)
+    x = np.ones((8, 32), np.int8)
+    dev = c.device.clone(trim=True)
+    serial = [c.run_on(dev, backend="simulator",
+                       inputs={"x": x}).outputs for _ in range(3)]
+    pool = DevicePool(c, size=1, backend="simulator", max_respawns=4,
+                      checkpoint_every=1)
+    try:
+        s1 = pool.session(slot=0)
+        s2 = pool.session(slot=0)
+        for _ in range(2):
+            s1.submit(x=x).wait(timeout=120)    # s1 resident, 2 steps
+
+        # instrument the swap: persistent_image (the swap-OUT of s1)
+        # signals mid-swap and stalls until the killer has fired
+        in_swap, killed = threading.Event(), threading.Event()
+        orig = type(c).persistent_image
+
+        def slow_image(self, device=None):
+            if device is not None:              # slot swap path only
+                in_swap.set()
+                killed.wait(timeout=60)
+                time.sleep(0.05)                # let kill_slot block
+            return orig(self, device=device)
+
+        type(c).persistent_image = slow_image
+        try:
+            f2 = s2.submit(x=x)                 # forces s2 swap-in
+            assert in_swap.wait(timeout=60), "swap never started"
+            t = threading.Thread(target=pool.kill_slot, args=(0,))
+            t.start()
+            killed.set()
+            t.join(timeout=60)
+            assert not t.is_alive()
+        finally:
+            type(c).persistent_image = orig
+        # s2's request died with the slot (it never ran a step)...
+        with pytest.raises(SlotDied):
+            f2.wait(timeout=120)
+        # ...but s1 was swapped out COMPLETELY before the respawn: its
+        # image replays byte-exactly on the rebuilt slot
+        got = s1.submit(x=x).wait(timeout=120)
+        assert s1.calls == 3
+        np.testing.assert_array_equal(got, serial[2])
+    finally:
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# satellite: Scheduler parked-deadline vs respawn race
+# ----------------------------------------------------------------------
+def test_parked_deadline_expires_when_respawn_never_arrives():
+    """A session request parked for a dead slot counts down its
+    deadline and fails DeadlineExpired — NOT SlotDied — when no respawn
+    arrives (ordering 1: deadline first)."""
+    c = _accumulator().compile(use_cache=False)
+    x = np.ones((8, 32), np.int8)
+    pool = DevicePool(c, size=2, backend="simulator", max_respawns=0,
+                      checkpoint_every=1)
+    sched = Scheduler(pool, SchedConfig(window_us=200.0, gang_width=1))
+    try:
+        ss = sched.session(slot=0)
+        ss.submit(x=x).wait(timeout=120)
+        # with max_respawns=0 a kill re-homes the session to a survivor,
+        # so kill BOTH slots: nothing can serve it, and the parked
+        # request must fail on ITS deadline, typed DeadlineExpired — not
+        # a premature SlotDied
+        pool.kill_slot(1)
+        pool.kill_slot(0)
+        fut = ss.submit(deadline_us=200_000.0, x=x)
+        with pytest.raises(DeadlineExpired, match="deadline lapsed"):
+            fut.wait(timeout=120)
+    finally:
+        sched.close()
+        pool.close()
+
+
+def test_parked_request_survives_when_respawn_arrives_first():
+    """Ordering 2: the respawn lands before the deadline — the parked
+    request is released to the revived slot and completes."""
+    c = _accumulator().compile(use_cache=False)
+    x = np.ones((8, 32), np.int8)
+    dev = c.device.clone(trim=True)
+    serial = [c.run_on(dev, backend="simulator",
+                       inputs={"x": x}).outputs for _ in range(2)]
+    pool = DevicePool(c, size=1, backend="simulator", max_respawns=0,
+                      checkpoint_every=1)
+    sched = Scheduler(pool, SchedConfig(window_us=200.0, gang_width=1))
+    try:
+        ss = sched.session(slot=0)
+        got = ss.submit(x=x).wait(timeout=120)
+        np.testing.assert_array_equal(got, serial[0])
+        pool.kill_slot(0)                   # only slot: nothing to
+        assert pool.slots[0].dead           # rehome to, session keeps
+        fut = ss.submit(deadline_us=30e6, x=x)   # its checkpoint
+        assert not fut.done()               # parked: slot is down
+        assert pool.respawn_slot(0)         # respawn wins the race
+        got = fut.wait(timeout=120)
+        np.testing.assert_array_equal(got, serial[1])
+    finally:
+        sched.close()
+        pool.close()
+
+
+def test_scheduler_retunes_width_to_surviving_slots():
+    """Gang widths re-tune to the surviving slot count when a slot dies
+    past its respawn budget (full-width releases must not stall waiting
+    for a width the pool can no longer co-schedule), and tune back up
+    after an explicit respawn."""
+    rng = np.random.default_rng(27)
+    p, make, ref = _mlp(rng)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=4, backend="simulator")
+    sched = Scheduler(pool, SchedConfig(window_us=300.0, gang_width=4))
+    try:
+        assert sched.gang_widths == [4]
+        pool.kill_slot(3)                   # terminal: no respawn budget
+        # full batches must still release at the degraded width instead
+        # of stalling forever at 4
+        feeds = [make() for _ in range(6)]
+        futs = [sched.submit(**f) for f in feeds]
+        for fu, feed in zip(futs, feeds):
+            np.testing.assert_array_equal(fu.wait(timeout=120),
+                                          ref(feed))
+        assert sched.gang_widths == [3]
+        assert pool.respawn_slot(3)         # ops revival
+        feeds = [make() for _ in range(4)]
+        futs = [sched.submit(**f) for f in feeds]
+        for fu, feed in zip(futs, feeds):
+            np.testing.assert_array_equal(fu.wait(timeout=120),
+                                          ref(feed))
+        assert sched.gang_widths == [4]     # tuned back up
+    finally:
+        sched.close()
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# segment watchdog
+# ----------------------------------------------------------------------
+def test_watchdog_kills_hung_host_fn_and_pool_recovers():
+    """A host fn that never returns trips the watchdog: the slot is
+    killed (typed WatchdogTimeout at the future), respawned, and the
+    pool keeps serving other programs' requests."""
+    hung = threading.Event()
+    unhang = threading.Event()
+
+    def hang(a):
+        hung.set()
+        unhang.wait(timeout=120)            # far past the deadline
+        return a
+
+    rng = np.random.default_rng(28)
+    p, make, _ = _hostful(rng, hang)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=2, backend="simulator", max_respawns=2,
+                      watchdog=WatchdogConfig(mult=2.0, floor_s=0.3,
+                                              poll_s=0.05))
+    try:
+        f = pool.submit(**make())
+        assert hung.wait(timeout=60)
+        with pytest.raises(WatchdogTimeout, match="watchdog deadline"):
+            f.wait(timeout=120)
+        assert sum(s.stats.watchdog_kills for s in pool.slots) >= 1
+        assert "watchdog kill" in pool.describe()
+    finally:
+        unhang.set()
+        pool.close(timeout=10)
+
+
+def test_watchdog_never_fires_on_slowest_legitimate_gang():
+    """False-positive guard: gangs priced by the TimingModel get a
+    budget the SLOWEST legitimate execution stays well inside — a full
+    serving sweep under an armed watchdog ends with zero kills."""
+    rng = np.random.default_rng(29)
+    p, make, ref = _mlp(rng, m=16, d=32, layers=3)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=4, backend="pallas",
+                      watchdog=WatchdogConfig())    # default budget
+    try:
+        feeds = [make() for _ in range(12)]
+        futs = [pool.submit(**f) for f in feeds]
+        for fu, feed in zip(futs, feeds):
+            np.testing.assert_array_equal(fu.wait(timeout=300),
+                                          ref(feed))
+        assert sum(s.stats.watchdog_kills for s in pool.slots) == 0
+        assert sum(s.stats.deaths for s in pool.slots) == 0
+    finally:
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# DRAM integrity
+# ----------------------------------------------------------------------
+def test_injected_bit_flip_detected_and_restaged_byte_exact():
+    """A scripted constant-region bit-flip is caught by the pre-gang
+    checksum and restaged from the pristine image: every output still
+    byte-matches the fault-free serial run."""
+    rng = np.random.default_rng(30)
+    p, make, ref = _mlp(rng)
+    c = p.compile(use_cache=False)
+    feeds = [make() for _ in range(8)]
+    serial = [c(backend="simulator", **f) for f in feeds]
+    plan = FaultPlan(faults=[Fault(kind="flip", gang=1, slot=0, byte=77),
+                             Fault(kind="flip", gang=3, slot=1,
+                                   byte=1 << 20)])
+    pool = DevicePool(c, size=2, backend="simulator", integrity=True,
+                      fault_plan=plan)
+    try:
+        futs = [pool.submit(**f) for f in feeds]
+        for fu, want in zip(futs, serial):
+            np.testing.assert_array_equal(fu.wait(timeout=120), want)
+        assert plan.fired_counts().get("flip", 0) == 2
+        assert sum(s.stats.integrity_restages for s in pool.slots) >= 1
+        assert pool.verify_integrity() == []    # clean after repair
+    finally:
+        pool.close()
+
+
+def test_verify_integrity_audit_and_repair_modes():
+    """Manual corruption: the audit reports it; repair=False raises
+    typed; repair=True restages and a re-audit is clean."""
+    from repro.core.serve import IntegrityError
+    rng = np.random.default_rng(31)
+    p, make, ref = _mlp(rng)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=2, backend="simulator", integrity=True)
+    try:
+        feed = make()
+        pool.submit(**feed).wait(timeout=120)
+        name, addr, nbytes = c.integrity_regions()[0]
+        pool.slots[0].device.dram.mem[addr] ^= 0xFF
+        with pytest.raises(IntegrityError, match="constant region"):
+            pool.verify_integrity(repair=False)
+        findings = pool.verify_integrity()      # repair
+        assert findings and "slot0" in findings[0]
+        assert pool.verify_integrity() == []
+        np.testing.assert_array_equal(
+            pool.submit(**feed).wait(timeout=120), ref(feed))
+    finally:
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# chaos gauntlet: seeded FaultPlan, survivors byte-exact, losses typed
+# ----------------------------------------------------------------------
+def test_chaos_gauntlet_survivors_byte_exact_losses_typed():
+    """Seeded kills+flips+delays at a high per-gang rate: every
+    surviving request byte-matches the fault-free serial run, every
+    loss is typed, and no wait() ever hangs."""
+    rng = np.random.default_rng(32)
+    p, make, ref = _mlp(rng)
+    c = p.compile(use_cache=False)
+    feeds = [make() for _ in range(24)]
+    serial = [c(backend="simulator", **f) for f in feeds]
+    plan = FaultPlan.random(seed=99, n_gangs=200, slots=3, rate=0.25,
+                            max_delay_s=0.005)
+    pool = DevicePool(c, size=3, backend="simulator", max_respawns=8,
+                      retries=3, retry_backoff_s=0.01, integrity=True,
+                      fault_plan=plan)
+    survivors = losses = 0
+    try:
+        futs = [pool.submit(**f) for f in feeds]
+        for fu, want in zip(futs, serial):
+            try:
+                got = fu.wait(timeout=300)      # bounded: never hangs
+            except (SlotDied, PoolClosed, WatchdogTimeout):
+                losses += 1                     # typed, accounted
+                continue
+            survivors += 1
+            np.testing.assert_array_equal(got, want)
+        assert survivors > 0
+        # reconciliation: whatever fired is on the record
+        assert len(pool.fault_log) == len(plan.fired)
+    finally:
+        pool.close()
+
+
+# ----------------------------------------------------------------------
+# satellite: PoolFuture.wait(timeout=) -> typed WaitTimeout
+# ----------------------------------------------------------------------
+def test_pool_future_wait_timeout_typed():
+    entered, release = threading.Event(), threading.Event()
+
+    def blocker(a):
+        entered.set()
+        release.wait(timeout=60)
+        return a
+
+    rng = np.random.default_rng(33)
+    p, make, _ = _hostful(rng, blocker)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=1, backend="simulator")
+    try:
+        f = pool.submit(**make())
+        assert entered.wait(timeout=60)
+        with pytest.raises(WaitTimeout, match=rf"request #{f.seq}"):
+            f.wait(timeout=0.05)
+        assert isinstance(WaitTimeout("x"), TimeoutError)  # catchable
+        release.set()
+        f.wait(timeout=120)                 # still completes after
+    finally:
+        release.set()
+        pool.close()
+
+
+def test_sched_future_wait_timeout_typed():
+    entered, release = threading.Event(), threading.Event()
+
+    def blocker(a):
+        entered.set()
+        release.wait(timeout=60)
+        return a
+
+    rng = np.random.default_rng(34)
+    p, make, _ = _hostful(rng, blocker)
+    c = p.compile(use_cache=False)
+    pool = DevicePool(c, size=1, backend="simulator")
+    sched = Scheduler(pool, SchedConfig(window_us=100.0, gang_width=1))
+    try:
+        f = sched.submit(**make())
+        assert entered.wait(timeout=60)
+        with pytest.raises(WaitTimeout, match="not done within"):
+            f.wait(timeout=0.05)
+        release.set()
+        f.wait(timeout=120)
+    finally:
+        release.set()
+        sched.close()
+        pool.close()

@@ -74,6 +74,15 @@ SCHED_GRAPHS = int(os.environ.get(
 LOWBIT_GRAPHS = int(os.environ.get(
     "REPRO_FUZZ_LOWBIT_GRAPHS",
     "24" if FUZZ_FLAVOR == "lowbit" else "6"))
+# "chaos" = random graphs served through a self-healing DevicePool while
+# a seeded FaultPlan injects slot kills, DRAM bit flips, and gang delays:
+# survivors must be byte-identical to fault-free serial execution, every
+# loss must surface a typed error (SlotDied after retry exhaustion /
+# PoolClosed), and the pool's fault log must account for every fired
+# fault (nightly flavor; a small always-on sweep keeps tier-1 coverage).
+CHAOS_GRAPHS = int(os.environ.get(
+    "REPRO_FUZZ_CHAOS_GRAPHS",
+    "24" if FUZZ_FLAVOR == "chaos" else "4"))
 
 _VEC_OPS = (AluOp.ADD, AluOp.MIN, AluOp.MAX, AluOp.MUL)
 
@@ -422,6 +431,67 @@ def _run_one_sched(seed: int) -> None:
 
 
 # ----------------------------------------------------------------------
+# chaos flavor: random graphs through a self-healing DevicePool under a
+# seeded FaultPlan (kills / bit flips / delays); every survivor is
+# byte-diffed against fault-free serial execution, every loss is typed,
+# and the fault log must reconcile with the plan's fired entries
+# ----------------------------------------------------------------------
+def _run_one_chaos(seed: int) -> None:
+    from repro.core.chaos import FaultPlan
+    from repro.core.serve import DevicePool, SlotDied, PoolClosed
+
+    rng = np.random.default_rng(seed)
+    p, feeds = build_random_program(rng)
+    compiled = p.compile(use_cache=False)
+    backend = ("simulator", "pallas")[int(rng.integers(0, 2))]
+    pool_size = int(rng.integers(2, 5))
+    n_requests = int(rng.integers(4, 5 + 2 * pool_size))
+
+    def permute(feed):
+        return {k: rng.permutation(v.ravel()).reshape(v.shape)
+                for k, v in feed.items()}
+    requests = [permute(feeds) for _ in range(n_requests)]
+    serial = [compiled(backend=backend, **r) for r in requests]
+
+    plan = FaultPlan.random(
+        seed=seed, n_gangs=4 * n_requests, slots=pool_size,
+        rate=float(rng.choice([0.1, 0.2, 0.3])), max_delay_s=0.01)
+    ctx = (f"seed={seed} backend={backend} pool={pool_size} "
+           f"{plan.describe()} ({compiled.describe()})")
+    survivors, losses = 0, 0
+    with DevicePool(compiled, size=pool_size, backend=backend,
+                    max_respawns=8, retries=3, retry_backoff_s=0.01,
+                    integrity=True, fault_plan=plan) as pool:
+        futs = [pool.submit(**r) for r in requests]
+        for i, f in enumerate(futs):
+            try:
+                got = f.wait(timeout=600)   # a hang here is a bug
+            except (SlotDied, PoolClosed) as e:
+                losses += 1                 # typed, accounted loss
+                assert getattr(e, "attempts", 1) >= 1, ctx
+                continue
+            survivors += 1
+            want = serial[i]
+            if not isinstance(got, dict):
+                got, want = {"out": got}, {"out": want}
+            for name in got:
+                np.testing.assert_array_equal(
+                    got[name], want[name],
+                    err_msg=f"{ctx} req={i} node={name}: execution under "
+                            "fault injection diverged from fault-free "
+                            "serial")
+        assert survivors + losses == n_requests, ctx
+        assert len(pool.fault_log) == len(plan.fired), \
+            f"{ctx}: fault log ({len(pool.fault_log)}) does not " \
+            f"reconcile with fired faults ({len(plan.fired)})"
+        # respawn math: every death is either respawned or leaves the
+        # slot dead (respawn cap), never silent
+        for s in pool.slots:
+            assert s.stats.respawns <= s.stats.deaths, ctx
+            assert s.dead == (s.stats.deaths > s.stats.respawns), ctx
+
+
+# ----------------------------------------------------------------------
 # lowbit flavor: random graphs on packed sub-byte weight specs; the
 # packed DRAM image is byte-diffed against the numpy packed reference
 # and the LUT-GEMM kernel is A/B'd against the dense kernel per graph
@@ -681,6 +751,8 @@ def test_fuzz_cross_backend(idx):
         _run_one_sched(FUZZ_SEED + idx)
     elif FUZZ_FLAVOR == "lowbit":
         _run_one_lowbit(FUZZ_SEED + idx)
+    elif FUZZ_FLAVOR == "chaos":
+        _run_one_chaos(FUZZ_SEED + idx)
     else:
         _run_one(FUZZ_SEED + idx)
 
@@ -707,6 +779,15 @@ def test_fuzz_lowbit(idx):
     nightly REPRO_FUZZ_FLAVOR=lowbit job widens it and flips the main
     grid over too."""
     _run_one_lowbit(FUZZ_SEED + 15485863 + idx)
+
+
+@pytest.mark.parametrize("idx", range(CHAOS_GRAPHS))
+def test_fuzz_chaos(idx):
+    """Always-on self-healing sweep (seeded fault injection; survivors
+    byte-diffed against fault-free serial, losses typed); the nightly
+    REPRO_FUZZ_FLAVOR=chaos job widens it and flips the main grid over
+    too."""
+    _run_one_chaos(FUZZ_SEED + 2750159 + idx)
 
 
 @pytest.mark.parametrize("idx", range(SCHED_GRAPHS))
