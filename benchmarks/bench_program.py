@@ -544,6 +544,82 @@ def run_lowbit(calls: int = 20, out_json: str | None = None,
     return result
 
 
+def run_autotune(seed: int = 0, candidates: int = 12, top: int = 4,
+                 repeats: int = 5, deep: bool = False,
+                 out_json: str | None = None, quiet: bool = False) -> dict:
+    """Design-space autotuner trajectory (paper §4): seeded two-stage
+    search — TimingModel replay as the cheap oracle over every sampled
+    candidate, wall measurement + cross-engine byte validation for the
+    top-N — over one conv and one matmul workload around the default
+    pynq template.  Asserts the winner is validated AND beats the
+    unmodified base by >= 1.1x measured, then demonstrates the tuning
+    cache: recompiling the winner's program must be all hits.  Records
+    predicted-vs-measured for every stage-2 candidate and writes
+    ``benchmarks/BENCH_autotune.json``.  ``deep=True`` (nightly) widens
+    the sampled grid."""
+    from repro.core import autotune
+    from repro.core.program import op_signature
+
+    if deep:
+        candidates, top, repeats = 64, 8, repeats
+    base = hwspec.pynq()
+    cache = autotune.TuningCache()      # local: don't pollute the global
+    workloads = [
+        autotune.conv_workload(ConvShape(n=1, h=14, w=14, ic=32, oc=32,
+                                         kh=3, kw=3, stride=1, pad=1),
+                               seed=seed),
+        autotune.matmul_workload(64, 128, 128, seed=seed),
+    ]
+    say = (lambda s: None) if quiet else print
+    result = dict(seed=seed, base_spec=autotune.spec_key(base),
+                  deep=deep, workloads=[])
+    for wl in workloads:
+        res = autotune.search(wl, base_spec=base, seed=seed,
+                              n_candidates=candidates, top_n=top,
+                              repeats=repeats, cache=cache, log=say)
+        assert res.winner is not None and res.winner.validated, \
+            f"{wl.name}: no validated winner"
+        assert res.winner.predicted_cycles < res.baseline.predicted_cycles, \
+            f"{wl.name}: winner does not beat default pynq on the oracle"
+        assert res.speedup_measured >= 1.1, \
+            f"{wl.name}: measured speedup {res.speedup_measured:.2f}x < 1.1x"
+        # the cache round-trip: rebuild the winner's program and compile —
+        # every accel op must now resolve from the tuning records
+        prog, _, _ = wl.build(res.winner.candidate.spec,
+                              res.winner.candidate.virtual_threads,
+                              res.winner.candidate.lowering)
+        n_ops = sum(1 for n in prog.nodes if n.op in ("conv2d", "matmul"))
+        gc = autotune.global_cache()
+        snap = (dict(gc.entries), gc.hits, gc.misses)
+        try:
+            gc.entries = dict(cache.entries)
+            recompiled = prog.compile(use_cache=False)
+        finally:
+            gc.entries, gc.hits, gc.misses = snap
+        assert recompiled.tune_hits == n_ops and recompiled.tune_misses == 0
+        result["workloads"].append(
+            {**res.to_json(), "recompile_tune_hits": recompiled.tune_hits})
+
+    if out_json is None:
+        out_json = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_autotune.json")
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    if not quiet:
+        print(f"\nautotune trajectory (seed {seed}, {candidates} "
+              f"candidates, top-{top}):")
+        print(f"{'workload':<24} {'pred x':>7} {'meas x':>7} "
+              f"{'winner':>34} {'hits':>5}")
+        for w in result["workloads"]:
+            print(f"{w['workload']:<24} {w['speedup_predicted']:>6.2f}x "
+                  f"{w['speedup_measured']:>6.2f}x "
+                  f"{w['winner']['candidate']:>34} "
+                  f"{w['recompile_tune_hits']:>5}")
+        print(f"-> {out_json}")
+    return result
+
+
 if __name__ == "__main__":
     run()
     run_conv()
@@ -551,3 +627,4 @@ if __name__ == "__main__":
     run_pool()
     run_decode()
     run_lowbit()
+    run_autotune()

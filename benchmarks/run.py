@@ -101,6 +101,14 @@ def main() -> None:
                     f"exact={crow['exact']} ratio={crow['goodput_ratio']} "
                     "(full: python -m benchmarks.bench_chaos)"))
 
+    _section("Autotune smoke: seeded DSE on the calibrated cycle oracle")
+    t0 = time.perf_counter()
+    arow = bench_program.run_autotune(candidates=12, top=4)
+    summary.append(("autotune_smoke", (time.perf_counter() - t0) * 1e6,
+                    " ".join(f"x{w['speedup_measured']:.2f}"
+                             for w in arow["workloads"]) +
+                    " (deep: python -m benchmarks.bench_program)"))
+
     _section("Dry-run roofline table (from experiments/dryrun)")
     t0 = time.perf_counter()
     try:

@@ -1,9 +1,10 @@
 """VTA core: the paper's contribution (template, ISA, runtime, simulator,
 scheduler, program-level JIT) as a composable package."""
-from . import backend, chaos, compiler, conv, driver, hwspec  # noqa: F401
-from . import isa, layout, microop, pipeline_model, program  # noqa: F401
+from . import autotune, backend, chaos, compiler, conv, driver  # noqa: F401
+from . import hwspec, isa, layout, microop, pipeline_model, program  # noqa: F401
 from . import quantize, runtime, sched, scheduler, serve  # noqa: F401
 from . import simulator, workloads  # noqa: F401
+from .autotune import TuningCache, TuningRecord  # noqa: F401
 from .chaos import Fault, FaultPlan  # noqa: F401
 from .backend import (CrossBackendChecker, ExecutionBackend,  # noqa: F401
                       PallasBackend, SimulatorBackend, assert_fast_path,

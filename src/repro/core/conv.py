@@ -17,19 +17,23 @@ blocked NCHW plane *in place* as a K-major matrix through ``lower_matmul``
 transposed mode; works for batch-blocked template instances too (each
 image block is one transposed matmul; ``tpu_like()``-style specs included).
 
-``im2col`` (stride=1, opt-in) — builds the im2col matrix *in SRAM* with
+``im2col`` (stride=1) — builds the im2col matrix *in SRAM* with
 one 2D padded DMA per (icb, kh, kw) gather row, then runs the pure
 transposed-GEMM schedule over it: a single coalescable GEMM instruction
 per tile instead of one per output row.  Trades kh*kw-fold inp-SRAM
 duplication (the §2.5 argument for the direct schedule) for the smallest
 possible instruction stream — profitable when a shape is uop-cache- or
-insn-issue-bound, never selected automatically.
+insn-issue-bound.
 
 Selection rules (``select_conv_lowering``): auto picks ``via_matmul`` for
-eligible pointwise shapes and ``direct`` otherwise; ``im2col`` must be
-requested explicitly and requires stride=1 (its gather rows must be
-DMA-contiguous).  Constraint violations raise at graph-build time with
-the legal alternatives in the message.
+eligible pointwise shapes (structural 1:1 mapping); for every other
+stride-1 shape the choice between ``direct`` and ``im2col`` comes from
+REPLAYED CYCLES — each candidate is lowered into a scratch stream and
+priced on the calibrated TimingModel (:func:`predict_conv_cycles`), the
+cheaper one wins.  Strided shapes take ``direct`` (im2col's gather rows
+must be DMA-contiguous).  Explicit requests are validated and constraint
+violations raise at graph-build time with the legal alternatives in the
+message.
 
 Direct-schedule SRAM layouts per virtual-thread context:
   inp  tile: (cbt, iht, IWp)    idx = (cb*iht + ih)*IWp + iw
@@ -344,18 +348,105 @@ def conv_im2col_eligible(shape: ConvShape) -> bool:
     return shape.stride == 1
 
 
+def _ep_cost_sig(ep) -> Tuple:
+    """What an epilogue costs in the timing replay: its ALU-pass set and
+    whether a bias DMA happens — never the bias VALUES."""
+    if ep is None:
+        return ()
+    return (ep.shift, ep.clip_lo, ep.clip_hi, ep.relu,
+            ep.bias_blocked is not None)
+
+
+_PREDICT_MEMO: dict = {}
+
+
+def predict_conv_cycles(shape: ConvShape, spec: HardwareSpec, mode: str,
+                        *, epilogue=None, virtual_threads: int = 2,
+                        timing=None) -> int:
+    """Replayed TimingModel cycles of ONE conv2d node lowered in `mode`.
+
+    Emits the real lowering into a scratch runtime (synthetic base
+    addresses — the replay prices DMA sizes and uop iteration counts,
+    never the addresses) and replays it on the calibrated model.  This
+    is the cycle oracle behind auto lowering selection and the
+    autotuner; memoized per (mode, shape, spec, vt, epilogue-cost,
+    timing), so a compile touches each distinct decision once.  Raises
+    ValueError when `mode` cannot lower `shape` (e.g. SRAM too small)."""
+    from .driver import Device
+    from .simulator import TimingModel, replay_timing
+    tm = timing or TimingModel(spec)
+    key = (mode, shape, spec, virtual_threads, _ep_cost_sig(epilogue),
+           type(tm).__name__, tm.spec)
+    got = _PREDICT_MEMO.get(key)
+    if got is not None:
+        return got
+    lower = {"direct": lower_conv2d, "im2col": lower_conv_im2col,
+             "via_matmul": lower_conv1x1}[mode]
+    rt = Runtime(spec, device=Device(dram_size=1 << 22))
+    bias = 0 if (epilogue is not None
+                 and epilogue.bias_blocked is not None) else -1
+    lower(rt, x_base=0, w_base=0, y_base=0, shape=shape,
+          epilogue=epilogue, bias_base=bias,
+          virtual_threads=virtual_threads)
+    cycles = replay_timing(spec, rt.stream, tm).total_cycles
+    _PREDICT_MEMO[key] = cycles
+    return cycles
+
+
+def cheapest_conv_lowering(shape: ConvShape, spec: HardwareSpec, *,
+                           candidates: Tuple[str, ...] = ("direct",
+                                                          "im2col"),
+                           epilogue=None, virtual_threads: int = 2,
+                           timing=None) -> Tuple[str, dict]:
+    """Cycle-compare candidate lowerings on the TimingModel: returns
+    ``(winner, {mode: predicted_cycles})``.  Shape-ineligible or
+    SRAM-infeasible modes are dropped (priced at None in the map); ties
+    break toward the earlier candidate.  Raises if NO candidate can
+    lower the shape."""
+    cycles: dict = {}
+    for mode in candidates:
+        if mode == "im2col" and not conv_im2col_eligible(shape):
+            cycles[mode] = None
+            continue
+        if mode == "via_matmul" and not conv1x1_eligible(shape, spec):
+            cycles[mode] = None
+            continue
+        try:
+            cycles[mode] = predict_conv_cycles(
+                shape, spec, mode, epilogue=epilogue,
+                virtual_threads=virtual_threads, timing=timing)
+        except ValueError:
+            cycles[mode] = None
+    feasible = [(c, m) for m, c in cycles.items() if c is not None]
+    if not feasible:
+        raise ValueError(f"no candidate lowering in {candidates} can "
+                         f"lower {shape} on this spec")
+    return min(feasible)[1], cycles
+
+
 def select_conv_lowering(shape: ConvShape, spec: HardwareSpec,
-                         requested: Optional[str] = None) -> str:
+                         requested: Optional[str] = None, *,
+                         epilogue=None, virtual_threads: int = 2,
+                         timing=None) -> str:
     """Resolve (and validate) the lowering mode for one conv2d node.
 
-    requested=None/"auto" applies the module-docstring rules: via_matmul
-    for eligible pointwise shapes, direct otherwise.  An explicitly
-    requested mode is validated against its shape constraints and raises
-    a ValueError naming the legal alternatives — this is what makes bad
-    graph configurations fail at build time instead of deep inside a
-    lowering pass."""
+    requested=None/"auto": pointwise unit-stride shapes take
+    ``via_matmul`` (a structural 1:1 mapping, not a cost call); every
+    other eligible shape is decided by REPLAYED CYCLES — ``direct`` vs
+    ``im2col`` lowered into a scratch stream and priced on the
+    TimingModel (:func:`cheapest_conv_lowering`), never by a hardcoded
+    profitability rule.  An explicitly requested mode is validated
+    against its shape constraints and raises a ValueError naming the
+    legal alternatives — this is what makes bad graph configurations
+    fail at build time instead of deep inside a lowering pass."""
     if requested in (None, "auto"):
-        return "via_matmul" if conv1x1_eligible(shape, spec) else "direct"
+        if conv1x1_eligible(shape, spec):
+            return "via_matmul"
+        if not conv_im2col_eligible(shape):
+            return "direct"
+        return cheapest_conv_lowering(
+            shape, spec, epilogue=epilogue,
+            virtual_threads=virtual_threads, timing=timing)[0]
     if requested == "via_matmul":
         if not conv1x1_eligible(shape, spec):
             raise ValueError(

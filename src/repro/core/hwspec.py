@@ -214,6 +214,27 @@ def calibrated(base: HardwareSpec | None = None,
     return (base or pynq()).replace(**(fit or HOST_FIT))
 
 
+def spec_feasible(spec: HardwareSpec) -> str | None:
+    """Validate one candidate template instance against every derived-ISA
+    constraint: power-of-two SRAM depths, address fields that fit the
+    encodings, and the 32-bit uop budget (`uop_bits` must hold the acc
+    dst + max(inp, acc) src + wgt address fields).  Returns None when the
+    instance is buildable, else the constraint violation message — the
+    autotuner's cheap front-gate before it ever compiles a candidate."""
+    from .isa import IsaLayout
+    from .microop import UopLayout
+    try:
+        # constructing the derived layouts runs every width/budget check
+        UopLayout(spec)
+        IsaLayout(spec)
+        # depth accessors raise on non-power-of-two SRAM geometry
+        spec.inp_addr_bits, spec.wgt_addr_bits, spec.acc_addr_bits
+        spec.uop_addr_bits, spec.out_depth
+    except (ValueError, ZeroDivisionError) as e:
+        return str(e)
+    return None
+
+
 def tpu_like() -> HardwareSpec:
     """A TPU-v5e-flavoured instance of the template: MXU-shaped intrinsic
     (128x128), VMEM-scale buffers.  Used by the kernels' static VMEM

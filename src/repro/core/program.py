@@ -61,8 +61,9 @@ from . import hwspec as _hwspec, layout
 from .backend import BackendLike, resolve_backend
 from .compiler import (AccelStep, ArenaAllocator, CpuStep, ImageRange,
                        SegmentBuilder)
-from .conv import (ConvShape, conv2d_reference, lower_conv1x1,
-                   lower_conv2d, lower_conv_im2col, select_conv_lowering)
+from .conv import (ConvShape, conv1x1_eligible, conv2d_reference,
+                   lower_conv1x1, lower_conv2d, lower_conv_im2col,
+                   select_conv_lowering)
 from .hwspec import HardwareSpec
 from .isa import AluOp, MemId
 from .runtime import Runtime
@@ -376,22 +377,30 @@ class Program:
         accelerator segments (the paper's C1 split).
 
         lowering selects the accelerator schedule ("direct" | "im2col" |
-        "via_matmul"; None auto-selects per the rules in conv.py) and is
-        validated HERE, at graph-build time, so an infeasible choice fails
-        with an actionable message instead of a generic error deep inside
-        a lowering pass.  The resolved mode is recorded on the node and
-        shows up in ``CompiledProgram.describe()``.  fast_1x1=False is the
-        legacy spelling of lowering="direct"."""
+        "via_matmul"; None auto-selects per the rules in conv.py).  An
+        explicit request is validated HERE, at graph-build time, so an
+        infeasible choice fails with an actionable message instead of a
+        generic error deep inside a lowering pass.  Auto resolves the
+        structural pointwise fast path here too; every OTHER auto shape
+        stays pending (node.lowering=None) until ``compile()``, which
+        consults the tuning cache and falls back to the replayed-cycle
+        comparison (see conv.select_conv_lowering) — so a tuned record
+        can steer the pick without rebuilding the graph.  The resolved
+        mode shows up in ``CompiledProgram.describe()``.  fast_1x1=False
+        is the legacy spelling of lowering="direct"."""
         spec = self.spec
         if cpu_only:
             if lowering is not None:
                 raise ValueError("cpu_only conv2d nodes run host-side; "
                                  "lowering= does not apply")
         else:
-            lowering = select_conv_lowering(
-                shape, spec,
-                lowering if lowering is not None
-                else (None if fast_1x1 else "direct"))
+            req = (lowering if lowering is not None
+                   else (None if fast_1x1 else "direct"))
+            if req in (None, "auto"):
+                lowering = ("via_matmul"
+                            if conv1x1_eligible(shape, spec) else None)
+            else:
+                lowering = select_conv_lowering(shape, spec, req)
         if self._node(x).shape != (shape.n, shape.ic, shape.h, shape.w):
             raise ValueError(f"conv input shape {self._node(x).shape} != "
                              f"{(shape.n, shape.ic, shape.h, shape.w)}")
@@ -511,6 +520,15 @@ class Program:
                 device: Any = None) -> "CompiledProgram":
         """Lower the graph into encoded stream segments.
 
+        Consults the global :class:`autotune.TuningCache` first: every
+        accelerator op node looks up its per-(spec, op-signature) record
+        — a hit steers pending conv lowerings (and is counted on
+        ``CompiledProgram.tune_hits``; misses fall back to the
+        replayed-cycle comparison and count on ``tune_misses``).  The
+        resolved decisions are part of the compile-cache key, so a
+        tuning record landing between two compiles of the same graph
+        changes the artifact instead of hitting a stale cache entry.
+
         fence_mode: "buffer" (default) separates dependent ops with
         buffer-granular fences (only the consumer's loads of the produced
         buffer wait on the producer's final store — dependent layers
@@ -525,12 +543,13 @@ class Program:
         :func:`compile_multi`).  Co-staged artifacts are device-bound
         and therefore never enter the compile cache."""
         sig = self.signature()
+        tuned = _resolve_tuning(self)
         key = None if sig is None or device is not None \
-            else (sig, fence_mode, prestage)
+            else (sig, fence_mode, prestage, tuned.decisions)
         if use_cache and key is not None and key in _COMPILE_CACHE:
             return _COMPILE_CACHE[key]
         compiled = _build(self, fence_mode=fence_mode, prestage=prestage,
-                          device=device)
+                          device=device, tuned=tuned)
         if use_cache and key is not None:
             _COMPILE_CACHE[key] = compiled
         return compiled
@@ -567,13 +586,95 @@ def compile_multi(progs: Sequence[Program], fence_mode: str = "buffer",
 
 
 # ----------------------------------------------------------------------
+# tuning-cache consultation (compile-time schedule resolution)
+# ----------------------------------------------------------------------
+def op_signature(program: Program, n: Node) -> str:
+    """Stable per-op tuning key: what the node computes plus the schedule
+    knobs that shape its stream — shape-level, never data-level, so two
+    graphs differing only in weight values share tuning records, and
+    string-valued so a persisted TuningCache can use it as a JSON key."""
+    ep = n.epilogue.n_alu_passes if n.epilogue is not None else 0
+    vt = program.virtual_threads
+    if n.op == "conv2d":
+        s = n.conv
+        return (f"conv2d:n{s.n}.ic{s.ic}.h{s.h}.w{s.w}.k{s.kh}x{s.kw}"
+                f".s{s.stride}.p{s.pad}.oc{s.oc}:ep{ep}:vt{vt}")
+    if n.op == "matmul":
+        a, w = (program.nodes[i] for i in n.inputs)
+        return f"matmul:m{a.shape[0]}.k{a.shape[1]}.n{w.shape[0]}:ep{ep}:vt{vt}"
+    if n.op == "vbinop":
+        return f"vbinop:{n.shape[0]}.{n.alu_op}:vt{vt}"
+    return f"{n.op}:{n.shape}"
+
+
+@dataclass(frozen=True)
+class _ResolvedTuning:
+    """Outcome of one tuning-cache consultation: the graph's nodes with
+    pending conv lowerings resolved, the (node-idx, mode) decisions (part
+    of the compile-cache key), and the hit/miss tallies surfaced on the
+    CompiledProgram."""
+    nodes: Tuple[Node, ...]
+    decisions: Tuple[Tuple[int, str], ...]
+    hits: int
+    misses: int
+
+
+def _resolve_tuning(program: Program) -> _ResolvedTuning:
+    """Consult the global :class:`autotune.TuningCache` for every
+    accelerator op node and resolve pending (auto) conv lowerings.
+
+    Lookup is per (spec, op-signature) — a different spec is a different
+    key, so spec changes invalidate naturally.  A hit with a usable
+    lowering steers a pending conv node; a miss (or a record whose mode
+    the shape cannot take) falls back to the replayed-cycle comparison
+    in ``conv.select_conv_lowering``.  Explicit user requests are never
+    overridden."""
+    from .autotune import global_cache
+    cache = global_cache()
+    hits = misses = 0
+    nodes = list(program.nodes)
+    decisions = []
+    for i, n in enumerate(nodes):
+        if n.op not in ("conv2d", "matmul"):
+            continue
+        rec = cache.lookup(program.spec, op_signature(program, n))
+        if rec is not None:
+            hits += 1
+        else:
+            misses += 1
+        if n.op != "conv2d" or n.lowering is not None:
+            continue
+        mode = None
+        if rec is not None and rec.lowering:
+            try:
+                mode = select_conv_lowering(n.conv, program.spec,
+                                            rec.lowering)
+            except ValueError:
+                mode = None     # stale/shape-incompatible record
+        if mode is None:
+            mode = select_conv_lowering(
+                n.conv, program.spec, None, epilogue=n.epilogue,
+                virtual_threads=program.virtual_threads)
+        nodes[i] = replace(n, lowering=mode)
+        decisions.append((i, mode))
+    return _ResolvedTuning(tuple(nodes), tuple(decisions), hits, misses)
+
+
+# ----------------------------------------------------------------------
 # compilation: graph -> buffers + encoded stream segments
 # ----------------------------------------------------------------------
 def _build(prog: Program, fence_mode: str = "buffer",
-           prestage: bool = True, device: Any = None) -> "CompiledProgram":
+           prestage: bool = True, device: Any = None,
+           tuned: Optional[_ResolvedTuning] = None) -> "CompiledProgram":
     global STREAM_BUILDS
     spec = prog.spec
     vt = prog.virtual_threads
+    if tuned is None:
+        tuned = _resolve_tuning(prog)
+    # every decision below reads the RESOLVED node list: pending conv
+    # lowerings are fixed modes by now, and the CompiledProgram carries
+    # these copies so describe() shows what was actually lowered
+    pnodes = list(tuned.nodes)
     rt = Runtime(spec, device=device)
     image_lo = rt.device.dram._next
     addrs: Dict[int, int] = {}
@@ -581,7 +682,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
     # resolve output set first: a never-consumed input has no layout
     out_ids = list(prog._outputs)
     if not out_ids:
-        non_inputs = [n.idx for n in prog.nodes if n.op != "input"]
+        non_inputs = [n.idx for n in pnodes if n.op != "input"]
         if not non_inputs:
             raise ValueError("empty program")
         out_ids = [non_inputs[-1]]
@@ -590,10 +691,10 @@ def _build(prog: Program, fence_mode: str = "buffer",
     # last graph-order reader of each op result; inputs and program
     # outputs are persistent (rebound / read back every call)
     last_use: Dict[int, int] = {}
-    for n in prog.nodes:
+    for n in pnodes:
         for i in n.inputs:
             last_use[i] = n.idx
-    stable = {n.idx for n in prog.nodes if n.op == "input"} | set(out_ids)
+    stable = {n.idx for n in pnodes if n.op == "input"} | set(out_ids)
     arena_align = max(spec.inp_elem_bytes, spec.wgt_elem_bytes,
                       spec.acc_elem_bytes, spec.out_elem_bytes)
     arena = ArenaAllocator(lambda nb, al: rt.buffer_alloc(nb, align=al),
@@ -619,7 +720,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
         addrs[n.idx] = addr
         return addr
 
-    for n in prog.nodes:
+    for n in pnodes:
         if n.meta is None:
             raise ValueError(f"input {n.name!r} is never consumed — "
                              "its DRAM layout is undetermined")
@@ -633,12 +734,12 @@ def _build(prog: Program, fence_mode: str = "buffer",
                 rt.device.flush_cache(addrs[n.idx], packed.nbytes)
 
     def elem(nid: int) -> int:
-        n = prog.nodes[nid]
+        n = pnodes[nid]
         return addrs[nid] // n.meta.elem_bytes(spec)
 
     # bias constants are part of the graph: staged at compile time
     bias_base: Dict[int, int] = {}
-    for n in prog.nodes:
+    for n in pnodes:
         if n.op in ("matmul", "conv2d") and n.epilogue is not None \
                 and n.epilogue.bias_blocked is not None:
             addr = rt.copy_to_device(
@@ -646,14 +747,14 @@ def _build(prog: Program, fence_mode: str = "buffer",
                 align=spec.acc_elem_bytes)
             bias_base[n.idx] = rt.to_elem_addr(addr, MemId.ACC)
 
-    op_outputs = {n.idx for n in prog.nodes if n.op != "input"}
+    op_outputs = {n.idx for n in pnodes if n.op != "input"}
 
     # the accelerator node following each accelerator node *within its
     # segment* — a cpu step in between closes the stream, so ops separated
     # by one can never overlap and must not hedge SRAM for it
     next_in_segment: Dict[int, Node] = {}
     prev_accel: Optional[Node] = None
-    for n in prog.nodes:
+    for n in pnodes:
         if n.op == "cpu":
             prev_accel = None
         elif n.op in ("matmul", "conv2d", "vbinop"):
@@ -663,7 +764,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
 
     def make_lower(n: Node) -> Callable[..., None]:
         if n.op == "matmul":
-            a, w = (prog.nodes[i] for i in n.inputs)
+            a, w = (pnodes[i] for i in n.inputs)
             Mb = _ceil_div(a.shape[0], spec.batch)
             Kb = _ceil_div(a.shape[1], spec.block_in)
             Nb = _ceil_div(w.shape[0], spec.block_out)
@@ -677,7 +778,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
                              virtual_threads=vt, sram=sram, fenced=fenced)
             return lower
         if n.op == "conv2d":
-            x, w = (prog.nodes[i] for i in n.inputs)
+            x, w = (pnodes[i] for i in n.inputs)
             f = {"via_matmul": lower_conv1x1,
                  "im2col": lower_conv_im2col,
                  "direct": lower_conv2d}[n.lowering]
@@ -689,7 +790,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
                   virtual_threads=vt, sram=sram, fenced=fenced)
             return lower
         if n.op == "vbinop":
-            a, b = (prog.nodes[i] for i in n.inputs)
+            a, b = (pnodes[i] for i in n.inputs)
             ne = n.meta.blocked_shape(spec)[0]
 
             def lower(sram, fenced=False, n=n, a=a, b=b, ne=ne):
@@ -701,7 +802,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
 
     steps: List[Union[AccelStep, CpuStep]] = []
     seg = SegmentBuilder(rt, fence_mode=fence_mode)
-    for n in prog.nodes:
+    for n in pnodes:
         if n.op == "input":
             continue
         if n.op == "cpu":
@@ -739,14 +840,15 @@ def _build(prog: Program, fence_mode: str = "buffer",
                 rt.device.flush_cache(st.staged_addr, st.stream.nbytes)
                 staged_bytes += st.stream.nbytes
 
-    input_ids = {n.name: n.idx for n in prog.nodes if n.op == "input"}
-    const_names = {n.name for n in prog.nodes
+    input_ids = {n.name: n.idx for n in pnodes if n.op == "input"}
+    const_names = {n.name for n in pnodes
                    if n.op == "input" and n.const is not None}
-    persistent_ids = [n.idx for n in prog.nodes if n.persistent]
-    const_bytes = sum(n.meta.nbytes(spec) for n in prog.nodes
+    persistent_ids = [n.idx for n in pnodes if n.persistent]
+    const_bytes = sum(n.meta.nbytes(spec) for n in pnodes
                       if n.op == "input" and n.const is not None
                       and not n.persistent)
-    return CompiledProgram(spec=spec, nodes=list(prog.nodes), addrs=addrs,
+    return CompiledProgram(spec=spec, nodes=list(pnodes), addrs=addrs,
+                           tune_hits=tuned.hits, tune_misses=tuned.misses,
                            steps=steps, input_ids=input_ids,
                            output_ids=out_ids, device=rt.device,
                            image_range=ImageRange(image_lo,
@@ -762,7 +864,7 @@ def _build(prog: Program, fence_mode: str = "buffer",
                            n_intermediates=arena.intermediates,
                            persistent_ids=persistent_ids,
                            persistent_bytes=sum(
-                               prog.nodes[i].meta.nbytes(spec)
+                               pnodes[i].meta.nbytes(spec)
                                for i in persistent_ids))
 
 
@@ -819,6 +921,16 @@ class CompiledProgram:
     calls: int = 0
     last_staging_bytes: int = 0    # bytes staged by the most recent call
     last_stats: List[RunStats] = field(default_factory=list)
+    # tuning-cache consultation at compile time: how many accelerator op
+    # nodes resolved from a TuningCache record (hits) vs fell back to
+    # the default / cycle-compare path (misses)
+    tune_hits: int = 0
+    tune_misses: int = 0
+    # per-(timing-model) memo of sched.stream_costs: ISA decode +
+    # timing replay run once per program, shared by the Scheduler's
+    # gang-width tuner and the autotuner's cycle oracle
+    _cost_cache: Dict[Any, Any] = field(default_factory=dict, repr=False,
+                                        compare=False)
     # serializes __call__ end to end: staging + execution share the one
     # compile-time device, and the mirrors above must match the call
     # that produced them.  run_on never takes it.
@@ -885,7 +997,9 @@ class CompiledProgram:
                 f"for {self.n_intermediates} intermediates "
                 f"({self.arena_reuse_hits} reused, "
                 f"{self.arena_splits} split)"
-                f" | staged {self.staged_bytes}B")
+                f" | staged {self.staged_bytes}B"
+                f" | tune {self.tune_hits} hit/"
+                f"{self.tune_misses} miss")
         if self.const_bytes:
             tail += f" | constants {self.const_bytes}B"
             if self.spec.wgt_packed:
@@ -1052,6 +1166,8 @@ class CompiledProgram:
             stats.n_join_barriers = step.n_barriers
             stats.n_buffer_fences = step.n_fences
             stats.persistent_bytes = self.persistent_bytes
+            stats.tune_cache_hits = self.tune_hits
+            stats.tune_cache_misses = self.tune_misses
             return stats
         node = self.nodes[step.node_id]
         args = [self._read(i, device=device) for i in node.inputs]

@@ -118,15 +118,38 @@ def _stream_costs(compiled: CompiledProgram,
     return out
 
 
+def stream_costs(compiled: CompiledProgram,
+                 timing: Optional[TimingModel] = None
+                 ) -> List[Tuple[int, int, int]]:
+    """Memoized :func:`_stream_costs`.  A TimingModel's latencies are
+    fully determined by its class and its (frozen, hashable) spec, so
+    the memo key is exactly that pair — a fresh ``TimingModel(spec)``
+    per call still hits.  The cache lives on the CompiledProgram
+    (``_cost_cache``), so the Scheduler's gang-width tuner and the
+    autotuner's cycle oracle share ONE decode + replay per program."""
+    tm = timing or TimingModel(compiled.spec)
+    key = (type(tm).__name__, tm.spec)
+    got = compiled._cost_cache.get(key)
+    if got is None:
+        got = _stream_costs(compiled, tm)
+        compiled._cost_cache[key] = got
+    return got
+
+
 def predict_gang_cycles(compiled: CompiledProgram, width: int,
                         timing: Optional[TimingModel] = None,
-                        cliff: int = VMAP_INTERPRET_CLIFF) -> float:
+                        cliff: int = VMAP_INTERPRET_CLIFF,
+                        costs: Optional[List[Tuple[int, int, int]]] = None
+                        ) -> float:
     """Predicted per-call cycles when `width` requests run as one gang.
     Fixed DMA setup amortizes across the gang (one batched launch per
     segment); lockstep cycles replicate, degraded by the interpret-mode
-    penalty once a segment's tiles-per-launch exceed the cliff."""
+    penalty once a segment's tiles-per-launch exceed the cliff.  Pass
+    precomputed ``costs`` when sweeping widths — the costs depend only
+    on the program, not the width."""
     cost = 0.0
-    for fixed, lockstep, tiles in _stream_costs(compiled, timing):
+    for fixed, lockstep, tiles in (costs if costs is not None
+                                   else stream_costs(compiled, timing)):
         penalty = max(1.0, (tiles * width) / cliff) if tiles else 1.0
         cost += lockstep * penalty + fixed / width
     return cost
@@ -149,15 +172,19 @@ def auto_gang_width(compiled: CompiledProgram, max_width: int,
     making wider gangs more expensive."""
     if max_width <= 1:
         return max(1, max_width)
+    # one decode + replay for the whole sweep: the per-segment costs do
+    # not depend on the candidate width
+    costs = stream_costs(compiled, timing)
     best = 1
-    prev = predict_gang_cycles(compiled, 1, timing, cliff)
+    prev = predict_gang_cycles(compiled, 1, timing, cliff, costs=costs)
     for w in range(2, max_width + 1):
-        cur = predict_gang_cycles(compiled, w, timing, cliff)
+        cur = predict_gang_cycles(compiled, w, timing, cliff, costs=costs)
         if cur >= prev * (1.0 - eps):
             break
         best, prev = w, cur
     if best < max_width:
-        full = predict_gang_cycles(compiled, max_width, timing, cliff)
+        full = predict_gang_cycles(compiled, max_width, timing, cliff,
+                                   costs=costs)
         if full <= prev:
             return max_width
     return best

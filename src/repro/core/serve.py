@@ -108,7 +108,6 @@ import numpy as np
 from .backend import BackendLike, resolve_backend
 from .chaos import FaultPlan
 from .compiler import AccelStep, CpuStep
-from .hwspec import HOST_FIT
 from .isa import IsaLayout
 from .program import CompiledProgram
 from .simulator import TimingModel, replay_timing
@@ -1005,10 +1004,12 @@ class DevicePool:
                             idx: int) -> float:
         """Predicted wall seconds of one accelerator segment: decode the
         stream, replay it on the TimingModel, convert cycles at the
-        HOST_FIT calibrated rate (the measured interpret-mode effective
-        frequency — deliberately the SLOW estimate, so the watchdog
-        budget over- rather than under-shoots).  Cached per (program,
-        step): decode + replay run once per pool lifetime."""
+        PROGRAM's spec frequency — replayed cycles are in the spec's
+        clock domain, so any other rate is off by the frequency ratio
+        (a re-fitted/calibrated spec would get spuriously tight or
+        never-firing deadlines).  The interpret-mode slowdown is what
+        ``WatchdogConfig.mult``/``floor_s`` pad for.  Cached per
+        (program, step): decode + replay run once per pool lifetime."""
         key = (pk, idx)
         got = self._budget_cache.get(key)
         if got is not None:
@@ -1019,7 +1020,7 @@ class DevicePool:
         insns = IsaLayout(prog.spec).decode_stream(
             np.ascontiguousarray(step.stream))
         cycles = replay_timing(prog.spec, insns, tm).total_cycles
-        sec = cycles / (HOST_FIT["freq_mhz"] * 1e6)
+        sec = cycles / (prog.spec.freq_mhz * 1e6)
         self._budget_cache[key] = sec
         return sec
 

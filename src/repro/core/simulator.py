@@ -137,6 +137,12 @@ class RunStats:
     # means a long-lived multi-program server is cycling more distinct
     # streams than the cache holds
     decode_evictions: int = 0
+    # tuning-cache consultation of the compile that produced this
+    # program (mirrored from CompiledProgram.tune_hits/tune_misses per
+    # call): accel op nodes resolved from a TuningCache record vs ones
+    # that fell back to the default / cycle-compare path
+    tune_cache_hits: int = 0
+    tune_cache_misses: int = 0
 
     @property
     def eager_compute_insns(self) -> int:
@@ -159,7 +165,8 @@ class RunStats:
                       "eager_alu_insns", "n_join_barriers",
                       "n_buffer_fences", "staging_bytes_per_call",
                       "tiles_resolved", "tile_batches", "lut_launches",
-                      "decode_evictions"):
+                      "decode_evictions", "tune_cache_hits",
+                      "tune_cache_misses"):
                 setattr(out, f, getattr(out, f) + getattr(r, f))
             out.gang_size = max(out.gang_size, r.gang_size)
             for nm, ms in r.modules.items():

@@ -126,7 +126,8 @@ def test_program_chain_fences_and_modes():
     assert c.describe() == (
         "accel[body:direct,point:via_matmul: 56 insns, 0 barriers, "
         "1 fences (body->point)] | arena 6400B/1 blocks for "
-        "1 intermediates (0 reused, 0 split) | staged 896B")
+        "1 intermediates (0 reused, 0 split) | staged 896B"
+        " | tune 0 hit/2 miss")
 
 
 def test_program_chain_barrier_baseline():
@@ -175,7 +176,7 @@ def test_program_fanout_fenced_stream_shape():
     assert c.describe() == (
         "accel[stem,left,right: 40 insns, 0 barriers, 2 fences "
         "(stem->left)] | arena 2048B/1 blocks for 1 intermediates "
-        "(0 reused, 0 split) | staged 640B")
+        "(0 reused, 0 split) | staged 640B | tune 0 hit/3 miss")
 
 
 def test_program_fanout_barrier_baseline_shape():

@@ -253,6 +253,34 @@ def test_auto_gang_width_respects_the_vmap_cliff():
     assert c4 <= c1 * 4
 
 
+def test_auto_gang_width_decodes_stream_costs_once(monkeypatch):
+    """Bugfix regression: the width walk used to re-run the decode +
+    TimingModel replay (``_stream_costs``) for EVERY candidate width.
+    The evaluation is now hoisted out of the loop and memoized on the
+    CompiledProgram, so one tuner call — and every later consumer,
+    scheduler or autotuner — costs exactly one decode."""
+    import repro.core.sched as sched_mod
+    rng = np.random.default_rng(6)
+    p, _, _ = _linear(rng, m=16, d=32)
+    compiled = p.compile(use_cache=False)
+
+    calls = []
+    real = sched_mod._stream_costs
+
+    def spy(c, tm=None):
+        calls.append(1)
+        return real(c, tm)
+
+    monkeypatch.setattr(sched_mod, "_stream_costs", spy)
+    w = auto_gang_width(compiled, max_width=4)
+    assert 1 <= w <= 4
+    assert len(calls) == 1, "costs must be evaluated once, not per width"
+    # a second tuner call (and the autotuner's oracle) hit the memo
+    auto_gang_width(compiled, max_width=8)
+    sched_mod.stream_costs(compiled)
+    assert len(calls) == 1
+
+
 def test_config_validation():
     with pytest.raises(ValueError):
         SchedConfig(window_us=-1.0)
